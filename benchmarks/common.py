@@ -1,0 +1,36 @@
+"""Shared benchmark plumbing: every table prints ``name,us_per_call,derived``
+CSV rows (one per measured configuration) to stdout."""
+
+from __future__ import annotations
+
+import statistics
+import time
+
+import numpy as np
+import jax
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.2f},{derived}")
+
+
+def time_fn(fn, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Median wall time in microseconds, device-synchronized."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(ts)
+
+
+def seesaw(shape, dtype=np.float32):
+    n = int(np.prod(shape))
+    return ((np.arange(n) % 512) / 512.0).reshape(shape).astype(dtype)
+
+
+def rand_complex(shape, dtype=np.complex64, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) + 1j * rng.standard_normal(shape)).astype(dtype)

@@ -1,0 +1,32 @@
+"""Benchmark entry point: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV; a few minutes total on one CPU core.
+
+  PYTHONPATH=src python -m benchmarks.run [table ...]
+
+Tables map to the paper: overhead=Fig2, tts=Fig3, plan_rigor=Figs4-5,
+backends=Fig6, radix=Fig7, dtypes=Fig8; kernels + lm_steps are the
+beyond-paper extensions (Pallas kernels, LM steps through the same runner).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+TABLES = ["overhead", "tts", "plan_rigor", "backends", "radix", "dtypes",
+          "kernels", "lm_steps"]
+
+
+def main() -> None:
+    want = [a for a in sys.argv[1:] if not a.startswith("-")] or TABLES
+    print("name,us_per_call,derived")
+    for name in want:
+        mod = __import__(f"benchmarks.table_{name}", fromlist=["run"])
+        t0 = time.perf_counter()
+        mod.run()
+        print(f"# table_{name} done in {time.perf_counter()-t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

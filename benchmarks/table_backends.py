@@ -1,0 +1,26 @@
+"""Paper Fig. 6: FFT-only runtime per backend, 1D and 3D — the
+CPU-vs-GPU-library comparison mapped onto our backend set (xla = vendor
+library, fourstep = MXU formulation, stockham = butterfly baseline,
+fourstep_pallas = fused kernel in interpret mode off-TPU)."""
+
+from __future__ import annotations
+
+from repro.core.benchmark import Benchmark, BenchmarkConfig
+from repro.core.client import Context
+from repro.core.tree import build_tree
+from repro.core.clients.jax_fft import (BluesteinClient, FourStepClient,
+                                        StockhamClient, XlaFFTClient)
+from .common import emit
+
+
+def run(reps: int = 3) -> None:
+    clients = [XlaFFTClient, StockhamClient, FourStepClient, BluesteinClient]
+    for tag, extents in (("1d", [(256,), (4096,), (65536,)]),
+                         ("3d", [(16,) * 3, (32,) * 3])):
+        nodes = build_tree(clients, extents, kinds=("Outplace_Real",),
+                           precisions=("float",))
+        cfg = BenchmarkConfig(warmups=1, repetitions=reps, output="/dev/null")
+        writer = Benchmark(Context(), cfg).run_nodes(nodes)
+        for (lib, ext, prec, kind, rg, op, mean, sd, n) in \
+                writer.aggregate(op="execute_forward"):
+            emit(f"backend/{tag}/{lib}/{ext}", mean * 1e3)

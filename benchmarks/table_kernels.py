@@ -1,0 +1,37 @@
+"""Beyond-paper: Pallas kernel micro-benchmarks (interpret mode off-TPU —
+numbers are correctness-path timings; the roofline table speaks for TPU) and
+the fused-fftconv vs unfused comparison that motivates the kernel."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.fft import fftconv as fftconv_mod
+from repro.kernels.fftconv import ops as conv_ops
+from repro.kernels.fft4step import ops as fs_ops
+from .common import emit, time_fn, rand_complex
+
+
+def run(reps: int = 3) -> None:
+    x = jnp.asarray(rand_complex((8, 4096)))
+    emit("kernel/fft4step_interp/4096x8",
+         time_fn(lambda v: fs_ops.fft(v, interpret=True), x, reps=reps))
+    emit("kernel/fourstep_jnp/4096x8",
+         time_fn(lambda v: __import__("repro.fft.fourstep", fromlist=["fft"]).fft(v),
+                 x, reps=reps))
+
+    c, b, L, K = 4, 4, 2048, 64
+    xs = jnp.asarray(np.random.default_rng(0).standard_normal((c, b, L)),
+                     jnp.float32)
+    h = jnp.asarray(np.random.default_rng(1).standard_normal((c, K)),
+                    jnp.float32)
+    emit("kernel/fftconv_fused_interp/2048",
+         time_fn(lambda a, f: conv_ops.fftconv(a, f, interpret=True), xs, h,
+                 reps=reps))
+    # unfused jnp path on the same workload (x as (B, L, D) layout)
+    xt = jnp.moveaxis(xs.reshape(c * b, L)[None], -1, 1).reshape(1, L, c * b)
+    ht = jnp.repeat(h, b, axis=0).T
+    emit("kernel/fftconv_unfused_xla/2048",
+         time_fn(lambda a, f: fftconv_mod.fftconv(a, f, backend="xla"), xt, ht,
+                 reps=reps))

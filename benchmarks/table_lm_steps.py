@@ -1,0 +1,40 @@
+"""The framework integration table: LM train/serve steps measured through
+the SAME gearshifft runner that measures FFT clients (DESIGN.md §3) —
+reduced configs on CPU; the full configs are exercised by the dry-run."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import get_config
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.models.model import Model
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.trainer import build_train_step
+from .common import emit, time_fn
+
+ARCHS = ["qwen3-1.7b", "granite-moe-1b-a400m", "xlstm-350m", "hymba-1.5b"]
+
+
+def run(reps: int = 3) -> None:
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        model = Model(cfg, remat=False)
+        params = model.init_params(jax.random.PRNGKey(0))
+        data = SyntheticTokens(DataConfig(vocab_size=cfg.vocab_size,
+                                          seq_len=64, global_batch=4,
+                                          n_codebooks=cfg.n_codebooks))
+        batch = data.batch(0)
+        step = jax.jit(build_train_step(model, OptConfig()))
+        opt = init_opt_state(params)
+        us = time_fn(lambda p, o, b: step(p, o, b)[2]["loss"],
+                     params, opt, batch, reps=reps)
+        emit(f"lm/train_step/{arch}", us, "reduced b4s64")
+
+        cache = model.init_cache(4, 96)
+        _, cache = jax.jit(model.prefill)(params, batch["tokens"], cache)
+        dec = jax.jit(model.decode_step)
+        tok = batch["tokens"][:, :1]
+        us = time_fn(lambda p, t, c: dec(p, t, c, jax.numpy.asarray(64))[0],
+                     params, tok, cache, reps=reps)
+        emit(f"lm/decode_step/{arch}", us, "reduced b4")

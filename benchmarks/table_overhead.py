@@ -1,0 +1,57 @@
+"""Paper Fig. 2: framework measurement overhead.
+
+Compares the gearshifft-framework-measured round-trip time against a
+standalone single-timer loop over the same compiled executables
+(standalone-tts) for two signal sizes. Paper claim: overhead < 2%,
+shrinking with size.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from repro.core.benchmark import Benchmark, BenchmarkConfig, make_input
+from repro.core.client import Context, Problem
+from repro.core.tree import build_tree
+from repro.core.clients.jax_fft import XlaFFTClient, _forward_fn, _inverse_fn
+from repro.core.plan import Candidate
+from .common import emit
+
+
+def _standalone_tts(problem: Problem, reps: int) -> float:
+    """One timer around the whole round trip (paper's standalone-tts)."""
+    cand = Candidate("xla")
+    fwd = jax.jit(_forward_fn(problem, cand))
+    inv = jax.jit(_inverse_fn(problem, cand))
+    x = jax.device_put(make_input(problem, 0))
+    jax.block_until_ready(inv(fwd(x)))  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        y = inv(fwd(jax.device_put(np.asarray(x))))
+    jax.block_until_ready(y)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(reps: int = 5) -> None:
+    for ext in [(32, 32, 32), (64, 64, 64)]:
+        problem = Problem(ext, "Inplace_Real", "float")
+        nodes = build_tree([XlaFFTClient], [ext], kinds=("Inplace_Real",),
+                           precisions=("float",))
+        cfg = BenchmarkConfig(warmups=2, repetitions=reps, output="/dev/null")
+        writer = Benchmark(Context(), cfg).run_nodes(nodes)
+        # framework view: sum of measured per-op times (upload..download)
+        per_run = {}
+        for r in writer.rows:
+            if r.op in ("upload", "execute_forward", "execute_inverse",
+                        "download"):
+                per_run.setdefault(r.run, 0.0)
+                per_run[r.run] += r.time_ms
+        fw_us = 1e3 * np.mean(list(per_run.values()))
+        sa_us = _standalone_tts(problem, reps)
+        name = "x".join(map(str, ext))
+        emit(f"overhead/framework/{name}", fw_us, "per-op timers")
+        emit(f"overhead/standalone_tts/{name}", sa_us, "single timer")
+        emit(f"overhead/ratio/{name}", fw_us / sa_us * 100, "percent")

@@ -1,0 +1,37 @@
+"""Paper Figs. 4-5: plan-rigor trade-offs — planning time vs transform time
+for ESTIMATE / MEASURE / WISDOM_ONLY (wisdom pre-generated like
+fftwf-wisdom)."""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+from repro.core.benchmark import Benchmark, BenchmarkConfig
+from repro.core.client import Context
+from repro.core.plan import PlanRigor
+from repro.core.tree import build_tree
+from repro.core.wisdom import generate
+from repro.core.clients.jax_fft import PlannedClient
+from .common import emit
+
+
+def run(reps: int = 3) -> None:
+    extents = [(256,), (2048,), (16, 16, 16), (32, 32, 32)]
+    with tempfile.TemporaryDirectory() as td:
+        wpath = os.path.join(td, "wisdom.json")
+        wisdom = generate(extents, wpath, rigor=PlanRigor.MEASURE,
+                          kinds=("Inplace_Real",))
+        for rigor in (PlanRigor.ESTIMATE, PlanRigor.MEASURE,
+                      PlanRigor.WISDOM_ONLY):
+            nodes = build_tree([PlannedClient], extents,
+                               kinds=("Inplace_Real",), precisions=("float",))
+            cfg = BenchmarkConfig(warmups=1, repetitions=reps, rigor=rigor,
+                                  output="/dev/null")
+            writer = Benchmark(Context(), cfg).run_nodes(nodes, wisdom=wisdom)
+            for (lib, ext, prec, kind, rg, op, mean, sd, n) in \
+                    writer.aggregate(op="init_forward"):
+                emit(f"plan_time/{rigor.value}/{ext}", mean * 1e3)
+            for (lib, ext, prec, kind, rg, op, mean, sd, n) in \
+                    writer.aggregate(op="execute_forward"):
+                emit(f"fft_time/{rigor.value}/{ext}", mean * 1e3)

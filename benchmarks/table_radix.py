@@ -1,0 +1,25 @@
+"""Paper Fig. 7: powerof2 vs radix357 vs oddshape extent classes.
+powerof2 should win; bluestein covers oddshape everywhere (cuFFT analogue),
+the planner (PlannedClient) picks the best feasible backend per class."""
+
+from __future__ import annotations
+
+from repro.core.benchmark import Benchmark, BenchmarkConfig
+from repro.core.client import Context
+from repro.core.extents import classify
+from repro.core.tree import build_tree
+from repro.core.clients.jax_fft import PlannedClient, XlaFFTClient
+from .common import emit
+
+
+def run(reps: int = 3) -> None:
+    extents = [(1024,), (960,), (19 * 19,),          # 1D per class
+               (16, 16, 16), (12, 12, 12), (19, 19, 19)]
+    nodes = build_tree([XlaFFTClient, PlannedClient], extents,
+                       kinds=("Outplace_Real",), precisions=("float",))
+    cfg = BenchmarkConfig(warmups=1, repetitions=reps, output="/dev/null")
+    writer = Benchmark(Context(), cfg).run_nodes(nodes)
+    for (lib, ext, prec, kind, rg, op, mean, sd, n) in \
+            writer.aggregate(op="execute_forward"):
+        cls = classify(tuple(int(v) for v in ext.split("x")))
+        emit(f"radix/{cls}/{lib}/{ext}", mean * 1e3)

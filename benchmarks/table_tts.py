@@ -1,0 +1,22 @@
+"""Paper Fig. 3: time-to-solution for powerof2 3D single-precision R2C
+out-of-place forward transforms, per backend."""
+
+from __future__ import annotations
+
+from repro.core.benchmark import Benchmark, BenchmarkConfig
+from repro.core.client import Context
+from repro.core.tree import build_tree
+from repro.core.clients.jax_fft import FourStepClient, StockhamClient, XlaFFTClient
+from .common import emit
+
+
+def run(max_exp: int = 5, reps: int = 3) -> None:
+    extents = [(2 ** e,) * 3 for e in range(3, max_exp + 1)]
+    nodes = build_tree([XlaFFTClient, StockhamClient, FourStepClient], extents,
+                       kinds=("Outplace_Real",), precisions=("float",))
+    cfg = BenchmarkConfig(warmups=1, repetitions=reps, output="/dev/null")
+    writer = Benchmark(Context(), cfg).run_nodes(nodes)
+    for (lib, ext, prec, kind, rigor, op, mean, sd, n) in writer.aggregate(op="total"):
+        emit(f"tts/{lib}/{ext}", mean * 1e3, f"sd={sd*1e3:.1f}us n={n}")
+    for (lib, ext, prec, kind, rigor, op, mean, sd, n) in writer.aggregate(op="execute_forward"):
+        emit(f"fft_only/{lib}/{ext}", mean * 1e3, f"sd={sd*1e3:.1f}us")

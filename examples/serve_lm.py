@@ -1,0 +1,11 @@
+"""Batched serving example: continuous batching over a reduced model.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch qwen3-1.7b --requests 8
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,154 @@
+"""The benchmark runner — gearshifft's measurement core (paper §2.2, Fig. 1).
+
+Per selected tree node:  context create (timed once per suite) ->
+for each run in (warmups + repetitions):
+    allocate -> init_forward -> upload -> execute_forward
+    -> init_inverse -> execute_inverse -> download -> destroy
+each operation individually timed; 'total' spans allocate..destroy.
+After the last run the round-trip output is validated against the input:
+err = sample standard deviation of (input - roundtrip); err > eps marks the
+node failed and the suite CONTINUES with the next node (paper behavior).
+"""
+
+from __future__ import annotations
+
+import traceback
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+from .client import Context, Problem
+from .plan import PlanRigor
+from .results import ResultWriter, Row
+from .timer import Timer
+from .tree import BenchNode
+
+# compile-time constants in gearshifft's cmake; options here
+DEFAULT_ERROR_BOUND = 1e-5
+DEFAULT_WARMUPS = 2
+DEFAULT_REPS = 10
+
+OPS = ("allocate", "init_forward", "upload", "execute_forward",
+       "init_inverse", "execute_inverse", "download", "destroy", "total")
+
+
+@dataclass
+class BenchmarkConfig:
+    warmups: int = DEFAULT_WARMUPS
+    repetitions: int = DEFAULT_REPS
+    error_bound: float = DEFAULT_ERROR_BOUND
+    rigor: PlanRigor = PlanRigor.ESTIMATE
+    output: str = "result.csv"
+    seed: int = 2017  # year of the paper
+
+
+def make_input(problem: Problem, seed: int) -> np.ndarray:
+    """The paper fills buffers with a see-saw function on [0, 1)."""
+    n = problem.n_elems
+    saw = (np.arange(n, dtype=np.float64) % 512) / 512.0
+    x = saw.reshape(problem.batch, *problem.extents).astype(problem.real_dtype)
+    if problem.complex_input:
+        x = x.astype(problem.input_dtype)
+    return x
+
+
+def roundtrip_error(x: np.ndarray, y: np.ndarray) -> float:
+    """epsilon = sample standard deviation of (input - roundtrip) (paper §2.2)."""
+    d = (x.astype(np.complex128) - y.astype(np.complex128)).ravel()
+    n = d.size
+    if n < 2:
+        return float(np.abs(d).max(initial=0.0))
+    mean = d.mean()
+    return float(np.sqrt(np.sum(np.abs(d - mean) ** 2) / (n - 1)))
+
+
+@dataclass
+class Benchmark:
+    """Suite driver: configure(argv) + run(clients, extents...)."""
+
+    context: Context
+    config: BenchmarkConfig = field(default_factory=BenchmarkConfig)
+    writer: ResultWriter = None
+
+    def __post_init__(self):
+        if self.writer is None:
+            self.writer = ResultWriter(self.config.output)
+
+    def run_nodes(self, nodes: Sequence[BenchNode], wisdom=None, verbose: bool = False) -> ResultWriter:
+        with Timer() as t_ctx:
+            self.context.create()
+        self.writer.add(Row("context", getattr(self.context, "device_kind", "?"),
+                            "-", 0, "-", "-", "-", "-", 0, "create_context",
+                            t_ctx.time_ms))
+        for node in nodes:
+            self._run_node(node, wisdom, verbose)
+        self.context.destroy()
+        return self.writer
+
+    # ------------------------------------------------------------------
+    def _run_node(self, node: BenchNode, wisdom, verbose: bool) -> None:
+        p = node.problem
+        cfg = self.config
+        base = dict(library=node.client_cls.title,
+                    device=getattr(self.context, "device_kind", "?"),
+                    extents="x".join(map(str, p.extents)), rank=p.rank,
+                    extent_class=node.extent_class, precision=p.precision,
+                    kind=p.kind, rigor=cfg.rigor.value)
+        host_in = make_input(p, cfg.seed)
+        last_out = None
+        try:
+            for run in range(-cfg.warmups, cfg.repetitions):
+                client = node.client_cls(p, self.context, rigor=cfg.rigor, wisdom=wisdom)
+                times: dict[str, float] = {}
+                t_total = Timer().start()
+                with Timer() as t:
+                    client.allocate()
+                times["allocate"] = t.time_ms
+                with Timer() as t:
+                    client.init_forward()
+                times["init_forward"] = t.time_ms
+                with Timer() as t:
+                    client.upload(host_in)
+                times["upload"] = t.time_ms
+                with Timer() as t:
+                    client.execute_forward()
+                times["execute_forward"] = t.time_ms
+                with Timer() as t:
+                    client.init_inverse()
+                times["init_inverse"] = t.time_ms
+                with Timer() as t:
+                    client.execute_inverse()
+                times["execute_inverse"] = t.time_ms
+                with Timer() as t:
+                    last_out = client.download()
+                times["download"] = t.time_ms
+                with Timer() as t:
+                    client.destroy()
+                times["destroy"] = t.time_ms
+                times["total"] = t_total.stop()
+                if run >= 0:  # warmup runs are not recorded
+                    nbytes = {"upload": client.get_transfer_size(),
+                              "download": client.get_transfer_size(),
+                              "allocate": client.get_alloc_size(),
+                              "init_forward": client.get_plan_size(),
+                              "init_inverse": client.get_plan_size()}
+                    for op in OPS:
+                        self.writer.add(Row(**base, run=run, op=op,
+                                            time_ms=times[op],
+                                            bytes=nbytes.get(op, 0)))
+            # validate AFTER the last run (paper: validated once at the end)
+            err = roundtrip_error(host_in, last_out.reshape(host_in.shape))
+            ok = err <= cfg.error_bound
+            self.writer.add(Row(**base, run=cfg.repetitions, op="validate",
+                                time_ms=0.0, bytes=0, success=bool(ok),
+                                error="" if ok else f"roundtrip_err={err:.3e}"))
+            if verbose:
+                print(f"[{'ok' if ok else 'FAIL'}] {node.path} err={err:.2e}")
+        except Exception as e:  # failed config: record, continue with next node
+            self.writer.add(Row(**base, run=0, op="validate", time_ms=0.0,
+                                bytes=0, success=False,
+                                error=f"{type(e).__name__}: {e}"))
+            if verbose:
+                print(f"[FAIL] {node.path}: {e}")
+                traceback.print_exc()

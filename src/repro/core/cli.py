@@ -1,0 +1,79 @@
+"""gearshifft-style CLI.
+
+    python -m repro.core.cli -e 128x128 1024 -r '*/float/*/Inplace_Real' \
+        --client XlaFFT --rigor measure -o result.csv
+
+reproduces `gearshifft_clfft -e 128x128 1024 -r */float/*/Inplace_Real -d cpu`.
+One process can host several "library binaries" (clients); selecting a single
+client mimics the per-library executables gearshifft builds.
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import Sequence
+
+from .benchmark import Benchmark, BenchmarkConfig
+from .client import KINDS, PRECISIONS, Context
+from .extents import parse_extents
+from .plan import PlanRigor
+from .tree import build_tree, select
+from .wisdom import Wisdom
+from .clients import jax_fft as jf
+
+CLIENTS = {
+    "XlaFFT": jf.XlaFFTClient,
+    "Stockham": jf.StockhamClient,
+    "FourStep": jf.FourStepClient,
+    "FourStepPallas": jf.FourStepPallasClient,
+    "Bluestein": jf.BluesteinClient,
+    "Planned": jf.PlannedClient,
+}
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(prog="repro-bench", description=__doc__)
+    p.add_argument("-e", "--extents", nargs="+", default=["32x32x32"],
+                   help="extents specs like 128x128 or 1024")
+    p.add_argument("-r", "--run", default=None,
+                   help="wildcard selection title/precision/extents/kind")
+    p.add_argument("--client", nargs="+", default=["XlaFFT"],
+                   choices=sorted(CLIENTS), help="client 'binaries' to run")
+    p.add_argument("--kinds", nargs="+", default=list(KINDS), choices=KINDS)
+    p.add_argument("--precisions", nargs="+", default=["float"], choices=PRECISIONS)
+    p.add_argument("--rigor", default="estimate",
+                   choices=[r.value for r in PlanRigor])
+    p.add_argument("--warmups", type=int, default=1)
+    p.add_argument("--reps", type=int, default=3)
+    p.add_argument("--error-bound", type=float, default=1e-5)
+    p.add_argument("--wisdom", default=None, help="wisdom JSON path")
+    p.add_argument("-o", "--output", default="result.csv")
+    p.add_argument("-b", "--batch", type=int, default=1)
+    p.add_argument("-v", "--verbose", action="store_true")
+    return p
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    extents = [parse_extents(e) for e in args.extents]
+    nodes = build_tree([CLIENTS[c] for c in args.client], extents,
+                       kinds=args.kinds, precisions=args.precisions,
+                       batch=args.batch)
+    nodes = select(nodes, args.run)
+    if not nodes:
+        print("no benchmarks selected")
+        return 1
+    cfg = BenchmarkConfig(warmups=args.warmups, repetitions=args.reps,
+                          error_bound=args.error_bound,
+                          rigor=PlanRigor(args.rigor), output=args.output)
+    wisdom = Wisdom(args.wisdom) if args.wisdom else None
+    bench = Benchmark(Context(), cfg)
+    writer = bench.run_nodes(nodes, wisdom=wisdom, verbose=args.verbose)
+    path = writer.save()
+    n_fail = sum(1 for r in writer.rows if not r.success)
+    print(f"wrote {len(writer.rows)} rows to {path}; {n_fail} failures")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,154 @@
+"""The gearshifft client protocol — paper Table 1, verbatim.
+
+Every benchmarked thing (an FFT backend, or an LM train/serve step) is a
+*client* exposing exactly these operations, each timed separately by the
+runner:
+
+    constructor/destructor   allocate / destroy
+    get_alloc_size / get_transfer_size / get_plan_size
+    init_forward / init_inverse          (planning + compilation)
+    execute_forward / execute_inverse    (the measured hot op)
+    upload / download                    (host <-> device transfer)
+
+The paper realizes this as a compile-time C++ template interface (static
+polymorphism); the JAX analogue is per-problem jit specialization — each
+(client x precision x transform x extents) owns its own compiled executable,
+so the hot loop dispatches nothing.
+"""
+
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+
+# The paper's four transform kinds (memory mode x data type)
+KINDS = ("Inplace_Real", "Inplace_Complex", "Outplace_Real", "Outplace_Complex")
+PRECISIONS = ("float", "double")
+
+
+@dataclass(frozen=True)
+class Problem:
+    """One node of the benchmark tree: a fully specified FFT problem."""
+
+    extents: tuple[int, ...]          # e.g. (128, 128, 128)
+    kind: str = "Outplace_Real"       # one of KINDS
+    precision: str = "float"          # 'float' | 'double'
+    batch: int = 1
+
+    def __post_init__(self):
+        assert self.kind in KINDS, self.kind
+        assert self.precision in PRECISIONS, self.precision
+
+    @property
+    def rank(self) -> int:
+        return len(self.extents)
+
+    @property
+    def inplace(self) -> bool:
+        return self.kind.startswith("Inplace")
+
+    @property
+    def complex_input(self) -> bool:
+        return self.kind.endswith("Complex")
+
+    @property
+    def real_dtype(self) -> np.dtype:
+        return np.dtype(np.float32 if self.precision == "float" else np.float64)
+
+    @property
+    def input_dtype(self) -> np.dtype:
+        if self.complex_input:
+            return np.dtype(np.complex64 if self.precision == "float" else np.complex128)
+        return self.real_dtype
+
+    @property
+    def n_elems(self) -> int:
+        out = self.batch
+        for v in self.extents:
+            out *= v
+        return out
+
+    @property
+    def signal_bytes(self) -> int:
+        return self.n_elems * self.input_dtype.itemsize
+
+    def signature(self) -> str:
+        from .extents import format_extents
+        return f"{format_extents(self.extents)}/{self.precision}/{self.kind}/b{self.batch}"
+
+
+class Context:
+    """Library/device context: created once per benchmark binary run and
+    timed separately (paper §2.2).  Subclasses do device discovery and
+    library-global init (e.g. loading wisdom)."""
+
+    title = "default"
+
+    def __init__(self, options: dict[str, Any] | None = None):
+        self.options = dict(options or {})
+
+    def create(self) -> None:  # timed once
+        import jax
+        self.device = jax.devices()[0]
+        self.device_kind = self.device.device_kind
+
+    def destroy(self) -> None:
+        pass
+
+
+class FFTClient(abc.ABC):
+    """Table-1 interface. The runner drives exactly this sequence per run:
+
+    upload -> init_forward -> execute_forward -> [init_inverse ->
+    execute_inverse] -> download, wrapped by allocate/destroy, all timed.
+    """
+
+    title = "abstract"
+
+    def __init__(self, problem: Problem, context: Context):
+        self.problem = problem
+        self.context = context
+
+    # --- memory -----------------------------------------------------------
+    @abc.abstractmethod
+    def allocate(self) -> None: ...
+
+    @abc.abstractmethod
+    def destroy(self) -> None: ...
+
+    def get_alloc_size(self) -> int:
+        """Bytes of device signal buffers held."""
+        return 0
+
+    def get_transfer_size(self) -> int:
+        """Bytes moved per upload/download."""
+        return self.problem.signal_bytes
+
+    def get_plan_size(self) -> int:
+        """Bytes attributable to the plan (work areas, executable)."""
+        return 0
+
+    # --- planning ---------------------------------------------------------
+    @abc.abstractmethod
+    def init_forward(self) -> None: ...
+
+    @abc.abstractmethod
+    def init_inverse(self) -> None: ...
+
+    # --- execution --------------------------------------------------------
+    @abc.abstractmethod
+    def execute_forward(self) -> None: ...
+
+    @abc.abstractmethod
+    def execute_inverse(self) -> None: ...
+
+    # --- transfer ---------------------------------------------------------
+    @abc.abstractmethod
+    def upload(self, host_data: np.ndarray) -> None: ...
+
+    @abc.abstractmethod
+    def download(self) -> np.ndarray: ...

@@ -1,0 +1,250 @@
+"""The JAX FFT clients — the in-repo analogue of the paper's fftw/cuFFT/clFFT
+client implementations, one per backend engine.
+
+Backend map (DESIGN.md §2):
+  xla              XLA's native FFT HLO ("vendor library")
+  stockham         pure-jnp Stockham autosort (radix-2 butterfly baseline)
+  fourstep         matmul-DFT four-step (MXU formulation, jnp)
+  fourstep_pallas  the fused Pallas kernel path (interpret=True off-TPU)
+  dft              direct matmul DFT Pallas kernel (tiny extents)
+  bluestein        chirp-Z (any size)
+
+A client owns device buffers + AOT-compiled executables for ONE Problem —
+the jit-specialization equivalent of gearshifft's compile-time template
+instantiation.  init_forward/init_inverse re-lower and re-compile on every
+run so planning cost stays an honestly measured quantity (paper Figs. 4/5).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..client import Context, FFTClient, Problem
+from ..plan import Candidate, Plan, PlanRigor, make_plan
+from repro.fft import bluestein, fourstep, nd, stockham
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def _engine(cand: Candidate) -> Callable:
+    """Return cfft(x, inverse=False) transforming the LAST axis."""
+    b = cand.backend
+    if b == "stockham":
+        return stockham.fft
+    if b == "fourstep":
+        return fourstep.fft
+    if b == "bluestein":
+        return bluestein.fft
+    if b == "fourstep_pallas":
+        from repro.kernels.fft4step import ops as fs_ops
+        tile_b = cand.opts().get("tile_b", 8)
+        interp = not _on_tpu()
+        return lambda x, inverse=False: fs_ops.fft(x, inverse=inverse,
+                                                   tile_b=tile_b, interpret=interp)
+    if b == "dft":
+        from repro.kernels.dft_matmul import ops as dft_ops
+        interp = not _on_tpu()
+        return lambda x, inverse=False: dft_ops.dft(x, inverse=inverse, interpret=interp)
+    raise ValueError(f"unknown backend {b!r}")
+
+
+def _forward_fn(problem: Problem, cand: Candidate) -> Callable:
+    axes = tuple(range(-problem.rank, 0))
+    if cand.backend == "xla":
+        if problem.complex_input:
+            return lambda x: jnp.fft.fftn(x, axes=axes)
+        return lambda x: jnp.fft.rfftn(x, axes=axes)
+    eng = _engine(cand)
+    if problem.complex_input:
+        return lambda x: nd.fftn(x, eng, axes=axes)
+    return lambda x: nd.rfftn(x, eng, axes=axes)
+
+
+def _inverse_fn(problem: Problem, cand: Candidate) -> Callable:
+    axes = tuple(range(-problem.rank, 0))
+    if cand.backend == "xla":
+        if problem.complex_input:
+            return lambda y: jnp.fft.ifftn(y, axes=axes)
+        return lambda y: jnp.fft.irfftn(y, s=problem.extents, axes=axes)
+    eng = _engine(cand)
+    if problem.complex_input:
+        return lambda y: nd.fftn(y, eng, axes=axes, inverse=True)
+    return lambda y: nd.irfftn(y, problem.extents, eng, axes=axes)
+
+
+def build_forward(problem: Problem, cand: Candidate) -> Callable:
+    """jit-compiled forward for planner MEASURE timing."""
+    return jax.jit(_forward_fn(problem, cand))
+
+
+class JaxFFTClient(FFTClient):
+    """Generic client; subclasses pin ``backend_filter`` to mimic having one
+    binary per library (gearshifft_cufft, gearshifft_fftw, ...)."""
+
+    title = "jaxfft"
+    backend_filter: str | None = None   # force one backend, like a library binary
+    rigor = PlanRigor.ESTIMATE
+
+    def __init__(self, problem: Problem, context: Context,
+                 rigor: PlanRigor | None = None, wisdom=None):
+        super().__init__(problem, context)
+        if rigor is not None:
+            self.rigor = rigor
+        self.wisdom = wisdom
+        self.plan: Plan | None = None
+        self._buf = None
+        self._spec = None
+        self._fwd = self._inv = None
+        self._fwd_compiled = self._inv_compiled = None
+        self._plan_bytes = 0
+
+    # --- memory -----------------------------------------------------------
+    def allocate(self) -> None:
+        x = jnp.zeros((self.problem.batch, *self.problem.extents),
+                      dtype=self.problem.input_dtype.name)
+        self._buf = jax.device_put(x)
+        self._buf.block_until_ready()
+
+    def destroy(self) -> None:
+        for b in (self._buf, self._spec):
+            if b is not None:
+                try:
+                    b.delete()
+                except Exception:
+                    pass
+        self._buf = self._spec = None
+        self._fwd_compiled = self._inv_compiled = None
+
+    def get_alloc_size(self) -> int:
+        n_in = self.problem.signal_bytes
+        if self.problem.inplace:
+            return n_in
+        # out-of-place: plus the spectrum buffer
+        if self.problem.complex_input:
+            return 2 * n_in
+        return n_in + self._halfspec_bytes()
+
+    def _halfspec_bytes(self) -> int:
+        ext = self.problem.extents
+        n_out = self.problem.batch
+        for v in ext[:-1]:
+            n_out *= v
+        n_out *= ext[-1] // 2 + 1
+        return n_out * self.problem.input_dtype.itemsize * (2 if not self.problem.complex_input else 1)
+
+    def get_plan_size(self) -> int:
+        return self._plan_bytes
+
+    # --- planning ---------------------------------------------------------
+    def _select(self) -> Candidate | None:
+        from ..plan import Plan, candidates, measure_plan
+        import time as _time
+
+        build = lambda c: build_forward(self.problem, c)
+        if self.backend_filter is None:
+            plan = make_plan(self.problem, self.rigor, build=build, wisdom=self.wisdom)
+            if plan is None:
+                return None
+        else:
+            # library-pinned client: planner searches only this backend's knobs
+            t0 = _time.perf_counter()
+            cands = [c for c in candidates(self.problem,
+                                           patient=(self.rigor is PlanRigor.PATIENT))
+                     if c.backend == self.backend_filter] or [Candidate(self.backend_filter)]
+            if self.rigor in (PlanRigor.MEASURE, PlanRigor.PATIENT) and len(cands) > 1:
+                cand, timings = measure_plan(self.problem, build, cands)
+            else:
+                cand, timings = cands[0], {}
+            plan = Plan(self.problem, cand, self.rigor,
+                        (_time.perf_counter() - t0) * 1e3, timings)
+        self.plan = plan
+        return plan.candidate
+
+    def init_forward(self) -> None:
+        cand = self._select()
+        if cand is None:
+            raise RuntimeError("NULL plan (wisdom miss)")  # fftw semantics
+        donate = (0,) if self.problem.inplace else ()
+        fn = jax.jit(_forward_fn(self.problem, cand), donate_argnums=donate)
+        lowered = fn.lower(jax.ShapeDtypeStruct(self._buf.shape, self._buf.dtype))
+        self._fwd_compiled = lowered.compile()
+        self._plan_bytes = _plan_bytes(self._fwd_compiled)
+
+    def init_inverse(self) -> None:
+        cand = self.plan.candidate
+        donate = (0,) if self.problem.inplace else ()
+        fn = jax.jit(_inverse_fn(self.problem, cand), donate_argnums=donate)
+        spec_shape = jax.eval_shape(_forward_fn(self.problem, cand),
+                                    jax.ShapeDtypeStruct((self.problem.batch, *self.problem.extents),
+                                                         self.problem.input_dtype.name))
+        lowered = fn.lower(spec_shape)
+        self._inv_compiled = lowered.compile()
+        self._plan_bytes += _plan_bytes(self._inv_compiled)
+
+    # --- execution --------------------------------------------------------
+    def execute_forward(self) -> None:
+        self._spec = self._fwd_compiled(self._buf)
+        if self.problem.inplace:
+            self._buf = None  # donated
+        self._spec.block_until_ready()
+
+    def execute_inverse(self) -> None:
+        self._buf = self._inv_compiled(self._spec)
+        if self.problem.inplace:
+            self._spec = None
+        self._buf.block_until_ready()
+
+    # --- transfer ---------------------------------------------------------
+    def upload(self, host_data: np.ndarray) -> None:
+        self._buf = jax.device_put(jnp.asarray(host_data))
+        self._buf.block_until_ready()
+
+    def download(self) -> np.ndarray:
+        return np.asarray(self._buf)
+
+
+def _plan_bytes(compiled) -> int:
+    try:
+        ma = compiled.memory_analysis()
+        return int(getattr(ma, "temp_size_in_bytes", 0) +
+                   getattr(ma, "generated_code_size_in_bytes", 0))
+    except Exception:
+        return 0
+
+
+# --- one "binary" per library, as in the paper ------------------------------
+class XlaFFTClient(JaxFFTClient):
+    title = "XlaFFT"
+    backend_filter = "xla"
+
+
+class StockhamClient(JaxFFTClient):
+    title = "Stockham"
+    backend_filter = "stockham"
+
+
+class FourStepClient(JaxFFTClient):
+    title = "FourStep"
+    backend_filter = "fourstep"
+
+
+class FourStepPallasClient(JaxFFTClient):
+    title = "FourStepPallas"
+    backend_filter = "fourstep_pallas"
+
+
+class BluesteinClient(JaxFFTClient):
+    title = "Bluestein"
+    backend_filter = "bluestein"
+
+
+class PlannedClient(JaxFFTClient):
+    """Planner-driven client (rigor decides the backend), fftw-style."""
+    title = "Planned"
+    backend_filter = None

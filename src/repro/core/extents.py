@@ -1,0 +1,67 @@
+"""Extents handling: parsing, classification and the paper's extent classes.
+
+gearshifft names its extent classes powerof2 / radix357 / oddshape (Fig. 7);
+we reproduce the same taxonomy and the '-e 128x128 1024' CLI syntax.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Iterator, Sequence
+
+
+def parse_extents(spec: str) -> tuple[int, ...]:
+    """'128x128x128' -> (128, 128, 128); '1024' -> (1024,)."""
+    try:
+        ext = tuple(int(p) for p in spec.lower().split("x"))
+    except ValueError as e:
+        raise ValueError(f"bad extents spec {spec!r}") from e
+    if not ext or any(v < 1 for v in ext) or len(ext) > 3:
+        raise ValueError(f"bad extents spec {spec!r} (rank 1..3, positive)")
+    return ext
+
+
+def format_extents(ext: Sequence[int]) -> str:
+    return "x".join(str(v) for v in ext)
+
+
+def total_elems(ext: Sequence[int]) -> int:
+    return math.prod(ext)
+
+
+def _factors_only(n: int, primes: Sequence[int]) -> bool:
+    for p in primes:
+        while n % p == 0:
+            n //= p
+    return n == 1
+
+
+def classify(ext: Sequence[int]) -> str:
+    """Paper extent classes: powerof2 | radix357 | oddshape."""
+    if all(v & (v - 1) == 0 for v in ext):
+        return "powerof2"
+    if all(_factors_only(v, (2, 3, 5, 7)) for v in ext):
+        return "radix357"
+    return "oddshape"
+
+
+def powerof2_extents(rank: int, min_exp: int, max_exp: int) -> Iterator[tuple[int, ...]]:
+    for e in range(min_exp, max_exp + 1):
+        yield (2 ** e,) * rank
+
+
+def radix357_extents(rank: int, count: int = 8, start: int = 3) -> Iterator[tuple[int, ...]]:
+    """Sizes of the form 2^a * 3^b * 5^c * 7^d that are not powers of two."""
+    emitted, v = 0, start
+    while emitted < count:
+        if _factors_only(v, (2, 3, 5, 7)) and (v & (v - 1)):
+            yield (v,) * rank
+            emitted += 1
+        v += 1 if v < 32 else max(1, v // 8)
+
+
+def oddshape_extents(rank: int, count: int = 6) -> Iterator[tuple[int, ...]]:
+    """Powers of 19 and friends (the paper's power-of-19 oddshape runs)."""
+    base = [19, 19 * 19, 19 ** 3, 11 ** 3, 13 ** 3, 17 ** 3, 23 ** 3, 19 ** 4]
+    for v in base[:count]:
+        yield (v,) * rank

@@ -1,0 +1,177 @@
+"""Plans, plan rigors, and the planner/autotuner.
+
+fftw's planner concept (paper §2.1) mapped to JAX:
+
+  plan          = (backend, factorization/tile knobs) + the AOT-compiled
+                  executable for one Problem
+  FFTW_ESTIMATE = static heuristic over the candidate space (no timing)
+  FFTW_MEASURE  = compile + time every candidate, keep the fastest
+  FFTW_PATIENT  = MEASURE over a widened space (kernel tile shapes too)
+  FFTW_WISDOM_ONLY = look up a persisted choice; None plan if absent
+
+Planning *time* is a first-class measurement (paper Figs. 4-5: MEASURE costs
+3-4 orders of magnitude more than ESTIMATE and can exceed the transform time
+by far) — the planner therefore reports plan_time_ms with every plan.
+"""
+
+from __future__ import annotations
+
+import enum
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from .client import Problem
+
+
+class PlanRigor(enum.Enum):
+    ESTIMATE = "estimate"
+    MEASURE = "measure"
+    PATIENT = "patient"
+    WISDOM_ONLY = "wisdom_only"
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """One point in the planner's search space."""
+
+    backend: str                      # 'xla' | 'fourstep' | 'stockham' | 'bluestein' | 'dft'
+    options: tuple[tuple[str, Any], ...] = ()
+
+    def opts(self) -> dict[str, Any]:
+        return dict(self.options)
+
+    def key(self) -> str:
+        o = ",".join(f"{k}={v}" for k, v in self.options)
+        return f"{self.backend}({o})" if o else self.backend
+
+
+@dataclass
+class Plan:
+    problem: Problem
+    candidate: Candidate
+    rigor: PlanRigor
+    plan_time_ms: float = 0.0
+    measured_ms: dict[str, float] = field(default_factory=dict)  # per-candidate timings
+
+
+def _pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+def _smooth(n: int) -> bool:
+    for p in (2, 3, 5, 7, 11, 13):
+        while n % p == 0:
+            n //= p
+    return n == 1
+
+
+def candidates(problem: Problem, patient: bool = False) -> list[Candidate]:
+    """Enumerate feasible (backend, knob) combinations for a problem.
+
+    Backends transform the innermost extent; outer extents are batched via
+    nd-application, so feasibility is decided per-axis (all axes must be
+    supported by the backend).
+    """
+    exts = problem.extents
+    out: list[Candidate] = [Candidate("xla")]
+    if all(_pow2(v) for v in exts):
+        out.append(Candidate("stockham"))
+    if all(_smooth(v) for v in exts):
+        out.append(Candidate("fourstep"))
+    if all(v <= 128 for v in exts):
+        out.append(Candidate("dft"))
+    if all(_kernel_factorable(v) for v in exts):
+        out.append(Candidate("fourstep_pallas"))
+    out.append(Candidate("bluestein"))  # always feasible
+    if patient:
+        extra = []
+        for c in out:
+            if c.backend == "fourstep_pallas":
+                for tb in (4, 8, 16):
+                    extra.append(Candidate("fourstep_pallas", (("tile_b", tb),)))
+        out += extra
+    return out
+
+
+def _kernel_factorable(n: int) -> bool:
+    """n = n1*n2 with both <= 128 (single fused fft4step kernel pass)."""
+    if n > 128 * 128:
+        return False
+    for n1 in range(min(128, n), 0, -1):
+        if n % n1 == 0 and n // n1 <= 128:
+            return True
+    return False
+
+
+def estimate_choice(problem: Problem) -> Candidate:
+    """The ESTIMATE heuristic: a static cost model.
+
+    Mirrors fftw's 'probably sub-optimal but instant' behavior: prefer the
+    vendor path (XLA HLO) for large/smooth problems, the matmul paths for
+    small ones, bluestein only when nothing else fits.
+    """
+    cands = {c.backend: c for c in candidates(problem)}
+    n_inner = problem.extents[-1]
+    if "dft" in cands and n_inner <= 128 and problem.rank == 1:
+        return cands["dft"]
+    if "xla" in cands:
+        return cands["xla"]
+    return cands["bluestein"]
+
+
+def measure_plan(problem: Problem, build: Callable[[Candidate], Callable],
+                 cands: Sequence[Candidate], reps: int = 3) -> tuple[Candidate, dict[str, float]]:
+    """MEASURE: compile + run each candidate, return fastest + timing table."""
+    import jax
+
+    timings: dict[str, float] = {}
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((problem.batch, *problem.extents)).astype(problem.real_dtype)
+    if problem.complex_input:
+        x = x.astype(problem.input_dtype)
+    xd = jax.device_put(x)
+    for cand in cands:
+        try:
+            fn = build(cand)
+            fn(xd)  # compile + warmup
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(xd))
+                best = min(best, (time.perf_counter() - t0) * 1e3)
+            timings[cand.key()] = best
+        except Exception as e:  # infeasible candidate: record, keep going
+            timings[cand.key()] = float("nan")
+    feasible = {k: v for k, v in timings.items() if v == v}
+    if not feasible:
+        raise RuntimeError(f"no feasible plan for {problem.signature()}")
+    best_key = min(feasible, key=feasible.get)
+    best_cand = next(c for c in cands if c.key() == best_key)
+    return best_cand, timings
+
+
+def make_plan(problem: Problem, rigor: PlanRigor,
+              build: Callable[[Candidate], Callable] | None = None,
+              wisdom=None) -> Plan | None:
+    """The planner. Returns None for WISDOM_ONLY misses (fftw NULL plan)."""
+    t0 = time.perf_counter()
+    if rigor is PlanRigor.WISDOM_ONLY:
+        if wisdom is None:
+            return None
+        cand = wisdom.lookup(problem)
+        if cand is None:
+            return None
+        return Plan(problem, cand, rigor, (time.perf_counter() - t0) * 1e3)
+
+    if rigor is PlanRigor.ESTIMATE or build is None:
+        cand, timings = estimate_choice(problem), {}
+    else:
+        cands = candidates(problem, patient=(rigor is PlanRigor.PATIENT))
+        cand, timings = measure_plan(problem, build, cands)
+    plan = Plan(problem, cand, rigor, (time.perf_counter() - t0) * 1e3, timings)
+    if wisdom is not None and rigor in (PlanRigor.MEASURE, PlanRigor.PATIENT):
+        wisdom.record(problem, cand)
+    return plan

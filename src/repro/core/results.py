@@ -1,0 +1,86 @@
+"""Standardized result output (paper design goal: 'standardized output
+format for downstream statistical analysis').
+
+One CSV row per (benchmark configuration, run, operation) — the layout the
+paper's R analysis scripts consume: identification columns first, then the
+measurement.  ``result.csv`` is the default sink, like gearshifft.
+"""
+
+from __future__ import annotations
+
+import csv
+import io
+import os
+import statistics
+from dataclasses import dataclass, field
+
+
+COLUMNS = [
+    "library", "device", "extents", "rank", "extent_class", "precision",
+    "kind", "rigor", "run", "op", "time_ms", "bytes", "success", "error",
+]
+
+
+@dataclass
+class Row:
+    library: str
+    device: str
+    extents: str
+    rank: int
+    extent_class: str
+    precision: str
+    kind: str
+    rigor: str
+    run: int
+    op: str
+    time_ms: float
+    bytes: int = 0
+    success: bool = True
+    error: str = ""
+
+    def as_list(self):
+        return [getattr(self, c) for c in COLUMNS]
+
+
+@dataclass
+class ResultWriter:
+    path: str = "result.csv"
+    rows: list[Row] = field(default_factory=list)
+
+    def add(self, row: Row) -> None:
+        self.rows.append(row)
+
+    def save(self) -> str:
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(self.path, "w", newline="") as f:
+            w = csv.writer(f)
+            w.writerow(COLUMNS)
+            for r in self.rows:
+                w.writerow(r.as_list())
+        return self.path
+
+    def to_csv_string(self) -> str:
+        buf = io.StringIO()
+        w = csv.writer(buf)
+        w.writerow(COLUMNS)
+        for r in self.rows:
+            w.writerow(r.as_list())
+        return buf.getvalue()
+
+    # --- aggregation for the paper-style figures ---------------------------
+    def aggregate(self, op: str | None = None):
+        """mean/stdev per (library, extents, precision, kind, rigor, op)."""
+        groups: dict[tuple, list[float]] = {}
+        for r in self.rows:
+            if not r.success or (op is not None and r.op != op):
+                continue
+            key = (r.library, r.extents, r.precision, r.kind, r.rigor, r.op)
+            groups.setdefault(key, []).append(r.time_ms)
+        out = []
+        for key, vals in sorted(groups.items()):
+            mean = statistics.fmean(vals)
+            sd = statistics.stdev(vals) if len(vals) > 1 else 0.0
+            out.append((*key, mean, sd, len(vals)))
+        return out

@@ -1,0 +1,50 @@
+"""Timer harness.
+
+The paper measures every client operation with its own timer object (CPU
+chrono timers for fftw/clFFT, CUDA events for cuFFT) and quantifies the
+timer-object overhead (paper Fig. 2, 'below 2%').  Our device analogue is a
+host monotonic timer around ``block_until_ready`` — the JAX equivalent of an
+event-synchronized device timing.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Timer:
+    """Start/stop timer accumulating one measurement in milliseconds."""
+
+    time_ms: float = float("nan")
+    _t0: float = field(default=0.0, repr=False)
+
+    def start(self) -> "Timer":
+        self._t0 = time.perf_counter()
+        return self
+
+    def stop(self) -> float:
+        self.time_ms = (time.perf_counter() - self._t0) * 1e3
+        return self.time_ms
+
+    def __enter__(self) -> "Timer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+def timed(fn, *args, **kwargs):
+    """Run fn, blocking on JAX outputs; return (result, milliseconds)."""
+    t = Timer().start()
+    out = fn(*args, **kwargs)
+    _block(out)
+    return out, t.stop()
+
+
+def _block(out) -> None:
+    import jax
+    for leaf in jax.tree_util.tree_leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()

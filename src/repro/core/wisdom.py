@@ -1,0 +1,90 @@
+"""Wisdom: persisted planner decisions (fftw's wisdom files, §2.1).
+
+A wisdom store maps a problem signature (extents/precision/kind/batch +
+device kind) to the winning Candidate from a MEASURE/PATIENT run.  Stored as
+JSON next to the results so WISDOM_ONLY runs are reproducible; the
+``python -m repro.core.wisdom`` entry point mirrors the ``fftwf-wisdom``
+pre-generation binary (paper §3.3).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Optional
+
+from .client import Problem
+from .plan import Candidate, PlanRigor
+
+
+DEFAULT_PATH = os.path.expanduser("~/.cache/repro/wisdom.json")
+
+
+class Wisdom:
+    def __init__(self, path: str = DEFAULT_PATH, device_kind: str = ""):
+        self.path = path
+        self.device_kind = device_kind
+        self._store: dict[str, dict] = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                self._store = json.load(f)
+
+    def _key(self, problem: Problem) -> str:
+        return f"{self.device_kind}|{problem.signature()}"
+
+    def lookup(self, problem: Problem) -> Optional[Candidate]:
+        rec = self._store.get(self._key(problem))
+        if rec is None:
+            return None
+        return Candidate(rec["backend"], tuple((k, v) for k, v in rec["options"]))
+
+    def record(self, problem: Problem, cand: Candidate) -> None:
+        self._store[self._key(problem)] = {
+            "backend": cand.backend,
+            "options": [list(kv) for kv in cand.options],
+        }
+
+    def save(self) -> None:
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self._store, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)  # atomic, like checkpoints
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+
+def generate(sizes, path: str = DEFAULT_PATH, rigor: PlanRigor = PlanRigor.PATIENT,
+             kinds=("Outplace_Real", "Outplace_Complex"), precisions=("float",)) -> Wisdom:
+    """Pre-plan a canonical size set (the fftwf-wisdom analogue)."""
+    import jax
+    from .plan import make_plan
+    from .clients.jax_fft import build_forward
+
+    wisdom = Wisdom(path, device_kind=jax.devices()[0].device_kind)
+    for ext in sizes:
+        for kind in kinds:
+            for prec in precisions:
+                problem = Problem(tuple(ext), kind, prec)
+                make_plan(problem, rigor, build=lambda c: build_forward(problem, c),
+                          wisdom=wisdom)
+    wisdom.save()
+    return wisdom
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description="pre-generate repro FFT wisdom")
+    p.add_argument("-o", "--output", default=DEFAULT_PATH)
+    p.add_argument("--max-exp", type=int, default=12,
+                   help="powers of two up to 2^max_exp (1D) / 2^(max_exp//3*3) (3D)")
+    args = p.parse_args()
+    sizes = [(2 ** e,) for e in range(1, args.max_exp + 1)]
+    sizes += [(2 ** e,) * 3 for e in range(1, args.max_exp // 3 + 1)]
+    w = generate(sizes, args.output)
+    print(f"wrote {len(w)} wisdom entries to {args.output}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Deterministic, resumable synthetic token pipeline.
+
+Fault-tolerance contract (DESIGN.md §6): batch content is a pure function of
+(seed, step), so a restarted job resumes mid-epoch by just setting the step —
+no iterator state to checkpoint, no skipped/duplicated batches, and the
+stream is identical for any data-parallel topology (elastic restarts resume
+byte-identically on a different mesh).
+
+The generator synthesizes structured sequences (Zipf unigrams + a Markov
+chain over a small state machine) so cross-entropy actually *decreases*
+during the example trainings — pure-uniform tokens would hide optimizer bugs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 1234
+    n_codebooks: int = 0           # musicgen-style multi-codebook streams
+
+
+class SyntheticTokens:
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        base = np.random.default_rng(cfg.seed)
+        v = cfg.vocab_size
+        # fixed Markov transition table: each token prefers a small successor set
+        self._succ = base.integers(0, v, (min(v, 4096), 4))
+
+    def batch(self, step: int) -> dict:
+        """Batch for a given step — pure function of (seed, step)."""
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed, step))
+        b, s = cfg.global_batch, cfg.seq_len
+        shape = (b, s, cfg.n_codebooks) if cfg.n_codebooks else (b, s)
+        # Zipf-ish marginal via exponential rank sampling
+        ranks = rng.exponential(scale=cfg.vocab_size / 8, size=shape)
+        tokens = np.minimum(ranks, cfg.vocab_size - 1).astype(np.int64)
+        # overlay Markov structure along the sequence axis
+        m = self._succ.shape[0]
+        pick = rng.integers(0, 4, shape)
+        flat = tokens.reshape(-1, *shape[2:]) if cfg.n_codebooks else tokens
+        if cfg.n_codebooks:
+            for q in range(cfg.n_codebooks):
+                t = tokens[..., q]
+                t[:, 1:] = np.where(rng.random((b, s - 1)) < 0.7,
+                                    self._succ[t[:, :-1] % m, pick[:, 1:, q]] % cfg.vocab_size,
+                                    t[:, 1:])
+        else:
+            tokens[:, 1:] = np.where(rng.random((b, s - 1)) < 0.7,
+                                     self._succ[tokens[:, :-1] % m, pick[:, 1:]] % cfg.vocab_size,
+                                     tokens[:, 1:])
+        return {"tokens": jnp.asarray(tokens, jnp.int32)}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1

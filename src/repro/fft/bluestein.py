@@ -1,0 +1,70 @@
+"""Bluestein chirp-Z FFT for arbitrary (incl. large-prime) lengths.
+
+The paper's "oddshape" extents (e.g. powers of 19) hit this path in fftw/cuFFT;
+we implement it on top of our power-of-two engines so every extent class from
+the paper's Fig. 7 is representable.
+
+Identity: with jk = (j^2 + k^2 - (k-j)^2) / 2,
+
+    X[k] = c[k] * sum_j (x[j] c[j]) * conj(c)[k - j],   c[j] = e^{-i pi j^2 / n}
+
+i.e. a linear convolution of a[j] = x[j] c[j] with b[j] = conj(c)[j], which we
+evaluate circularly at size m = next_pow2(2n - 1) via the Stockham engine.
+
+Numerical care: j^2 / n is reduced mod 2 in *integer* arithmetic (pi j^2 / n
+has period 2n in j^2) before the float conversion, so chirp phases stay
+accurate for n in the millions even in float32.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import stockham
+
+
+def _chirp(n: int, dtype) -> jnp.ndarray:
+    j = np.arange(n, dtype=np.int64)
+    jsq_mod = (j * j) % (2 * n)  # exact integer reduction
+    ang = -np.pi * jsq_mod.astype(np.float64) / n
+    return jnp.asarray(np.exp(1j * ang), dtype=dtype)
+
+
+def _next_pow2(v: int) -> int:
+    m = 1
+    while m < v:
+        m *= 2
+    return m
+
+
+def fft(x: jnp.ndarray, inverse: bool = False) -> jnp.ndarray:
+    """Chirp-Z DFT along the last axis; works for ANY length n."""
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    n = x.shape[-1]
+    if n == 1:
+        return x
+    c = _chirp(n, x.dtype)
+    if inverse:
+        c = jnp.conj(c)
+    m = _next_pow2(2 * n - 1)
+
+    a = jnp.zeros((*x.shape[:-1], m), dtype=x.dtype).at[..., :n].set(x * c)
+    # b[j] = conj(c)[|j|] placed circularly: b[0..n-1] and b[m-n+1..m-1]
+    bc = jnp.conj(c)
+    b = jnp.zeros((m,), dtype=x.dtype)
+    b = b.at[:n].set(bc)
+    b = b.at[m - n + 1:].set(bc[1:][::-1])
+
+    fa = stockham.fft(a)
+    fb = stockham.fft(b)
+    conv = stockham.fft(fa * fb, inverse=True)
+    y = conv[..., :n] * c
+    if inverse:
+        y = y / n
+    return y
+
+
+def ifft(x: jnp.ndarray) -> jnp.ndarray:
+    return fft(x, inverse=True)

@@ -1,0 +1,181 @@
+"""Distributed FFTs over a device mesh — the pod-scale extension of the paper.
+
+gearshifft benchmarks single-device libraries; real HPC FFT workloads (the
+paper's motivating image-reconstruction pipelines) outgrow one device.  We
+add mesh-parallel transforms built from shard_map + all_to_all, the
+TPU-native analogue of FFTW-MPI / cuFFTMp pencil decompositions:
+
+1D ("four-step across the mesh"): view n = n1*n2 as an (n1, n2) matrix with
+   rows sharded.  all_to_all transposes between the column pass and the row
+   pass; twiddles are computed per-shard from the device's axis_index.
+   Output in TRANSPOSED spectrum order (k = k1 + k2*n1), exactly like
+   FFTW-MPI's `FFTW_MPI_TRANSPOSED_OUT` — callers either accept the layout
+   (self-inverse round trips, spectral filtering) or pay one more all_to_all.
+
+2D/3D pencil: shard the leading axes, FFT the local axis, all_to_all to
+   rotate the next axis into locality, repeat.  Collective volume per device
+   per rotation = local block size — the canonical pencil cost model used
+   in EXPERIMENTS.md §Roofline.
+
+Axis-name convention: collectives take mesh axis names (str or tuple); the
+production mesh uses ('pod','data','model') so 3D transforms shard over
+('pod','data') x 'model'.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import fourstep
+
+
+# ---------------------------------------------------------------------------
+# 1D: distributed four-step
+# ---------------------------------------------------------------------------
+def _combined_index(axes: tuple[str, ...]):
+    """Row-major device index over one or more mesh axes (static sizes)."""
+    idx = jax.lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def fft1d_shard(x_block: jnp.ndarray, n1: int, n2: int, p: int,
+                axes: tuple[str, ...], inverse: bool = False) -> jnp.ndarray:
+    """Per-shard body (call under shard_map). x_block: (n1/P, n2) complex,
+    rows of the (n1, n2) four-step matrix view, row-sharded over ``axes``.
+
+    Returns (n1/P, n2): block-row k1-slab of D[k1, k2] — flattening device-
+    major gives the transposed spectrum X[k1 + k2*n1].
+
+    Inverse note: the two sub-transform passes apply 1/n1 and 1/n2, so the
+    global 1/n = 1/(n1*n2) normalization comes out exactly — no correction.
+    """
+    axis = axes if len(axes) > 1 else axes[0]
+    n = n1 * n2
+    # transpose: rows sharded -> columns sharded, j1 fully local
+    xt = jax.lax.all_to_all(x_block, axis, split_axis=1, concat_axis=0,
+                            tiled=True)                    # (n1, n2/P)
+    # column DFTs (over j1)
+    xt = jnp.moveaxis(fourstep.fft(jnp.moveaxis(xt, 0, -1), inverse=inverse), -1, 0)
+    # twiddle T[k1, j2_global] with j2_global = idx*(n2/P) + local
+    idx = _combined_index(axes)
+    k1 = jnp.arange(n1)
+    j2 = idx * (n2 // p) + jnp.arange(n2 // p)
+    sign = 2.0 if inverse else -2.0
+    ang = (sign * jnp.pi / n) * (k1[:, None] * j2[None, :]).astype(jnp.float64)
+    xt = xt * jnp.exp(1j * ang).astype(xt.dtype)
+    # transpose back: k1 sharded, j2 local
+    xb = jax.lax.all_to_all(xt, axis, split_axis=0, concat_axis=1,
+                            tiled=True)                    # (n1/P, n2)
+    # row DFTs (over j2)
+    return fourstep.fft(xb, inverse=inverse)
+
+
+def _choose_1d_factors(n: int, p: int) -> tuple[int, int]:
+    """n = n1*n2 with p | n1 (row-sharding) and both as square as possible."""
+    best = None
+    n1 = p
+    while n1 <= n:
+        if n % n1 == 0:
+            n2 = n // n1
+            score = abs(n1 - n2)
+            if best is None or score < best[0]:
+                best = (score, n1, n2)
+        n1 += p
+    if best is None:
+        raise ValueError(f"cannot shard n={n} over {p} devices")
+    return best[1], best[2]
+
+
+def make_fft1d(mesh: Mesh, axis: str | tuple[str, ...], n: int,
+               inverse: bool = False):
+    """Build a jit-able distributed 1D FFT over ``mesh[axis]``.
+
+    Input: (n,) complex sharded contiguously over ``axis``;
+    output: transposed-order spectrum, same sharding.
+    """
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    p = 1
+    for a in axes:
+        p *= mesh.shape[a]
+    n1, n2 = _choose_1d_factors(n, p)
+    spec_in = P(axes)
+
+    def body(xb):
+        # xb arrives (n/P,) = (n1/P * n2,) row-major rows of the matrix view
+        blk = xb.reshape(n1 // p, n2)
+        out = fft1d_shard(blk, n1, n2, p, axes, inverse=inverse)
+        return out.reshape(-1)
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(spec_in,), out_specs=spec_in)
+    return jax.jit(fn), (n1, n2)
+
+
+def transposed_to_natural(y: jnp.ndarray, n1: int, n2: int) -> jnp.ndarray:
+    """Undo the transposed spectrum order (host-side/test helper)."""
+    return y.reshape(n1, n2).T.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# 2D/3D: pencil decomposition
+# ---------------------------------------------------------------------------
+def fft3d_shard(x_block: jnp.ndarray, row_axis, col_axis,
+                inverse: bool = False) -> jnp.ndarray:
+    """Per-shard pencil 3D FFT body (call under shard_map).
+
+    Global array (X, Y, Z); block (X/Pr, Y/Pc, Z) with X sharded over
+    ``row_axis`` (size Pr), Y over ``col_axis`` (size Pc).  Returns block of
+    the spectrum in (X/Pr, Y/Pc, Z) layout after full 3 axis transforms.
+    """
+    eng = functools.partial(fourstep.fft, inverse=inverse)
+    # 1) FFT along Z (local)
+    x = eng(x_block)
+    # 2) rotate Y into locality: split Z over col_axis, gather Y
+    x = jax.lax.all_to_all(x, col_axis, split_axis=2, concat_axis=1, tiled=True)
+    #    now (X/Pr, Y, Z/Pc); FFT along Y
+    x = jnp.moveaxis(eng(jnp.moveaxis(x, 1, -1)), -1, 1)
+    # 3) rotate X into locality: split Y over row_axis, gather X
+    x = jax.lax.all_to_all(x, row_axis, split_axis=1, concat_axis=0, tiled=True)
+    #    now (X, Y/Pr, Z/Pc); FFT along X
+    x = jnp.moveaxis(eng(jnp.moveaxis(x, 0, -1)), -1, 0)
+    # 4) restore canonical sharding (X/Pr, Y/Pc, Z): undo both rotations
+    x = jax.lax.all_to_all(x, row_axis, split_axis=0, concat_axis=1, tiled=True)
+    x = jax.lax.all_to_all(x, col_axis, split_axis=1, concat_axis=2, tiled=True)
+    return x
+
+
+def make_fft3d(mesh: Mesh, row_axis, col_axis, shape: Sequence[int],
+               inverse: bool = False, keep_transposed: bool = False):
+    """Build a jit-able pencil 3D FFT.
+
+    Input/output: (X, Y, Z) complex with sharding P(row_axis, col_axis, None).
+    ``keep_transposed`` skips step 4 (output sharded (X, Y/Pr, Z/Pc)) —
+    the cheaper layout when a roundtrip (e.g. spectral conv) follows.
+    """
+    row_t = row_axis if isinstance(row_axis, str) else tuple(row_axis)
+    col_t = col_axis if isinstance(col_axis, str) else tuple(col_axis)
+
+    def body(xb):
+        if keep_transposed:
+            eng = functools.partial(fourstep.fft, inverse=inverse)
+            x = eng(xb)
+            x = jax.lax.all_to_all(x, col_t, split_axis=2, concat_axis=1, tiled=True)
+            x = jnp.moveaxis(eng(jnp.moveaxis(x, 1, -1)), -1, 1)
+            x = jax.lax.all_to_all(x, row_t, split_axis=1, concat_axis=0, tiled=True)
+            return jnp.moveaxis(eng(jnp.moveaxis(x, 0, -1)), -1, 0)
+        return fft3d_shard(xb, row_t, col_t, inverse=inverse)
+
+    in_spec = P(row_t, col_t, None)
+    out_spec = P(None, row_t, col_t) if keep_transposed else in_spec
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(in_spec,), out_specs=out_spec)
+    return jax.jit(fn)
+
+
+def sharding_for(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

@@ -1,0 +1,56 @@
+"""FFT-based long convolution — the model-side consumer of the FFT stack.
+
+Hyena/H3-style sequence mixing: y = irfft( rfft(x_pad) * rfft(h_pad) ) with
+zero padding to 2*seq (linear, not circular, convolution).  This is how the
+paper's technique enters the LM architectures (DESIGN.md §3): a depthwise
+frequency-domain convolution whose FFT engine is *plan-selected* by the
+gearshifft planner (backend + factorization chosen per extent), exactly like
+an FFT client in the benchmark suite.
+
+Cost: O(L log L) vs O(L*K) for direct conv — the sub-quadratic mixer used by
+the ssm/hybrid long-context paths.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _next_pow2(v: int) -> int:
+    m = 1
+    while m < v:
+        m *= 2
+    return m
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def fftconv(x: jnp.ndarray, h: jnp.ndarray, backend: str = "xla") -> jnp.ndarray:
+    """Depthwise linear convolution via FFT.
+
+    x: (..., L, D) activations;  h: (K, D) or (L, D) depthwise filters.
+    Returns (..., L, D): causal convolution y[t] = sum_{s<=t} x[s] h[t-s].
+
+    backend: 'xla' uses jnp.fft (XLA FFT HLO); 'stockham' / 'fourstep' route
+    through the in-repo engines (used by tests & the benchmark suite; on TPU
+    the planner picks the Pallas fourstep kernel for supported extents).
+    """
+    L = x.shape[-2]
+    m = _next_pow2(2 * L)
+    xt = jnp.swapaxes(x, -1, -2)  # (..., D, L): transform the time axis
+    ht = jnp.swapaxes(h, -1, -2)  # (D, K)
+    if backend == "xla":
+        xf = jnp.fft.rfft(xt, n=m, axis=-1)
+        hf = jnp.fft.rfft(ht, n=m, axis=-1)
+        y = jnp.fft.irfft(xf * hf, n=m, axis=-1)[..., :L]
+    else:
+        from . import fourstep, stockham, rfft as _rfft
+        eng = {"stockham": stockham.fft, "fourstep": fourstep.fft}[backend]
+        pad_x = jnp.zeros((*xt.shape[:-1], m), xt.dtype).at[..., :L].set(xt)
+        pad_h = jnp.zeros((*ht.shape[:-1], m), ht.dtype).at[..., :ht.shape[-1]].set(ht)
+        xf = _rfft.rfft(pad_x, eng)
+        hf = _rfft.rfft(pad_h, eng)
+        y = _rfft.irfft(xf * hf, m, eng)[..., :L]
+    return jnp.swapaxes(y, -1, -2).astype(x.dtype)

@@ -1,0 +1,43 @@
+"""N-dimensional transforms by separable axis application.
+
+A rank-d FFT is d batched 1-D transforms with axis moves in between — the
+formulation every library in the paper uses internally.  ``rfftn`` transforms
+the *last* axis real-to-complex first, then complex axes (numpy layout).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+
+from . import rfft as _rfft
+
+CFFT = Callable[..., jnp.ndarray]
+
+
+def fftn(x: jnp.ndarray, cfft: CFFT, axes: Sequence[int] | None = None,
+         inverse: bool = False) -> jnp.ndarray:
+    axes = tuple(range(x.ndim)) if axes is None else tuple(axes)
+    for ax in axes:
+        x = jnp.moveaxis(cfft(jnp.moveaxis(x, ax, -1), inverse=inverse), -1, ax)
+    return x
+
+
+def rfftn(x: jnp.ndarray, cfft: CFFT, axes: Sequence[int] | None = None) -> jnp.ndarray:
+    axes = tuple(range(x.ndim)) if axes is None else tuple(axes)
+    last, rest = axes[-1], axes[:-1]
+    y = jnp.moveaxis(_rfft.rfft(jnp.moveaxis(x, last, -1), cfft), -1, last)
+    for ax in rest:
+        y = jnp.moveaxis(cfft(jnp.moveaxis(y, ax, -1)), -1, ax)
+    return y
+
+
+def irfftn(y: jnp.ndarray, shape: Sequence[int], cfft: CFFT,
+           axes: Sequence[int] | None = None) -> jnp.ndarray:
+    axes = tuple(range(y.ndim)) if axes is None else tuple(axes)
+    last, rest = axes[-1], axes[:-1]
+    for ax in rest:
+        y = jnp.moveaxis(cfft(jnp.moveaxis(y, ax, -1), inverse=True), -1, ax)
+    n_last = shape[-1] if len(shape) else y.shape[last]
+    return jnp.moveaxis(_rfft.irfft(jnp.moveaxis(y, last, -1), n_last, cfft), -1, last)

@@ -1,0 +1,76 @@
+"""Pure-jnp reference FFTs — the oracles every backend is validated against.
+
+``jnp.fft`` lowers to XLA's native FFT HLO (DUCC on CPU, dedicated lowering on
+TPU).  These wrappers pin down the exact conventions (sign, normalization,
+half-spectrum layout) used throughout repro so that every hand-written backend
+(stockham / fourstep / bluestein / pallas kernels) asserts against one source
+of truth.
+
+Conventions (numpy-compatible):
+  forward :  X[k] = sum_j x[j] * exp(-2*pi*i*j*k / n)       (no scaling)
+  inverse :  x[j] = (1/n) * sum_k X[k] * exp(+2*pi*i*j*k / n)
+  rfft    :  returns n//2 + 1 coefficients along the transformed axis
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fft(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Forward complex-to-complex DFT along ``axis``."""
+    return jnp.fft.fft(x, axis=axis)
+
+
+def ifft(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Inverse complex-to-complex DFT along ``axis`` (1/n normalized)."""
+    return jnp.fft.ifft(x, axis=axis)
+
+
+def rfft(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Real-to-complex forward transform (half spectrum, n//2+1 bins)."""
+    return jnp.fft.rfft(x, axis=axis)
+
+
+def irfft(x: jnp.ndarray, n: int, axis: int = -1) -> jnp.ndarray:
+    """Complex-to-real inverse transform. ``n`` is the real output length."""
+    return jnp.fft.irfft(x, n=n, axis=axis)
+
+
+def fftn(x: jnp.ndarray, axes=None) -> jnp.ndarray:
+    return jnp.fft.fftn(x, axes=axes)
+
+
+def ifftn(x: jnp.ndarray, axes=None) -> jnp.ndarray:
+    return jnp.fft.ifftn(x, axes=axes)
+
+
+def rfftn(x: jnp.ndarray, axes=None) -> jnp.ndarray:
+    return jnp.fft.rfftn(x, axes=axes)
+
+
+def irfftn(x: jnp.ndarray, shape, axes=None) -> jnp.ndarray:
+    return jnp.fft.irfftn(x, s=shape, axes=axes)
+
+
+def dft_matrix(n: int, inverse: bool = False, dtype=jnp.complex64) -> jnp.ndarray:
+    """The dense n x n DFT matrix W with W[j,k] = exp(-+ 2 pi i j k / n).
+
+    The direct-matmul backend and the MXU four-step kernels contract against
+    exactly this matrix; inverse includes NO 1/n factor (applied by callers).
+    """
+    j = jnp.arange(n)
+    sign = 2.0 if inverse else -2.0
+    # float64 intermediate keeps twiddle accuracy for large n even in c64.
+    ang = (sign * jnp.pi / n) * (j[:, None] * j[None, :]).astype(jnp.float64)
+    return jnp.exp(1j * ang).astype(dtype)
+
+
+def twiddles(n1: int, n2: int, inverse: bool = False, dtype=jnp.complex64) -> jnp.ndarray:
+    """Four-step twiddle factors T[j1, k2] = exp(-+ 2 pi i j1 k2 / (n1*n2))."""
+    n = n1 * n2
+    sign = 2.0 if inverse else -2.0
+    j1 = jnp.arange(n1)
+    k2 = jnp.arange(n2)
+    ang = (sign * jnp.pi / n) * (j1[:, None] * k2[None, :]).astype(jnp.float64)
+    return jnp.exp(1j * ang).astype(dtype)

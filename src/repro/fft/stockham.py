@@ -1,0 +1,65 @@
+"""Iterative Stockham autosort radix-2 FFT in pure jnp.
+
+This is the classical GPU-friendly formulation the paper cites ([29],
+Stockham 1966): no bit-reversal pass, the permutation is absorbed into the
+per-stage data layout.  On TPU this maps to VPU work (adds + complex
+multiplies with reshapes between stages) and is therefore the *memory-bound*
+backend; the MXU-native path lives in ``fourstep.py``.  Kept because (a) it is
+the faithful algorithmic baseline, (b) it is the in-VMEM engine for odd
+power-of-two residual factors.
+
+Stage derivation (DIF Stockham, OTFFT formulation): with N = n * s fixed and
+the buffer indexed as x[q + s*p] (p < n position inside each length-n
+sub-transform, q < s the stride/batch index), one stage computes
+
+    y[q + s*(2p + 0)] =  x[q + s*p] + x[q + s*(p + n/2)]
+    y[q + s*(2p + 1)] = (x[q + s*p] - x[q + s*(p + n/2)]) * w_n^p ,  p < n/2
+
+then recurses with (n, s) <- (n/2, 2s).  After log2(N) stages the output is in
+natural order.  In array form each stage is a reshape to (..., 2, n/2, s),
+a butterfly, and a reshape back — which is exactly what we do below.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _stage_twiddle(n: int, inverse: bool, dtype) -> jnp.ndarray:
+    m = n // 2
+    sign = 2.0 if inverse else -2.0
+    ang = (sign * jnp.pi / n) * jnp.arange(m).astype(jnp.float64)
+    return jnp.exp(1j * ang).astype(dtype)
+
+
+def fft(x: jnp.ndarray, inverse: bool = False) -> jnp.ndarray:
+    """Radix-2 Stockham FFT along the last axis. Requires power-of-two length.
+
+    Forward is unnormalized; inverse applies the 1/N factor (numpy semantics).
+    Works on any complex dtype; batch dims are carried through.
+    """
+    n_total = x.shape[-1]
+    if n_total & (n_total - 1):
+        raise ValueError(f"stockham requires power-of-two length, got {n_total}")
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    batch = x.shape[:-1]
+
+    n, s = n_total, 1
+    while n > 1:
+        m = n // 2
+        w = _stage_twiddle(n, inverse, x.dtype)  # (m,)
+        v = x.reshape(*batch, 2, m, s)
+        a, b = v[..., 0, :, :], v[..., 1, :, :]
+        ya = a + b
+        yb = (a - b) * w[:, None]
+        x = jnp.stack([ya, yb], axis=-2).reshape(*batch, n_total)  # (..., m, 2, s)
+        n, s = m, 2 * s
+
+    if inverse:
+        x = x / n_total
+    return x
+
+
+def ifft(x: jnp.ndarray) -> jnp.ndarray:
+    return fft(x, inverse=True)

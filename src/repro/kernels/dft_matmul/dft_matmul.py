@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: batched small-n DFT as a dense MXU matmul.
+
+The TPU-native base case of the four-step decomposition (DESIGN.md §2): an
+n-point DFT with n <= 128 is a single (B_tile, n) x (n, n) matmul against the
+DFT matrix — systolic-array work at full MXU utilization, vs. a butterfly
+chain that would run on the VPU and be bound by VMEM shuffles.
+
+Complex data is carried as separate real/imag f32 planes (Pallas TPU has no
+complex dtype); one complex matmul = 4 real matmuls fused in one kernel pass
+so the x tiles are read from VMEM once.
+
+BlockSpec layout (grid over batch tiles):
+  x_re, x_im : (TILE_B, n)  VMEM, block i -> rows [i*TILE_B, (i+1)*TILE_B)
+  w_re, w_im : (n, n)       VMEM, broadcast to every grid step
+  y_re, y_im : (TILE_B, n)  VMEM
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE_B = 256  # 256 rows x 128 cols x 4B x 6 planes ~ 0.8 MB VMEM
+
+
+def _dft_kernel(xr_ref, xi_ref, wr_ref, wi_ref, yr_ref, yi_ref):
+    xr = xr_ref[...]
+    xi = xi_ref[...]
+    wr = wr_ref[...]
+    wi = wi_ref[...]
+    # complex matmul on the MXU; f32 accumulation
+    yr_ref[...] = jnp.dot(xr, wr, preferred_element_type=jnp.float32) - \
+                  jnp.dot(xi, wi, preferred_element_type=jnp.float32)
+    yi_ref[...] = jnp.dot(xr, wi, preferred_element_type=jnp.float32) + \
+                  jnp.dot(xi, wr, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def dft_matmul(xr: jnp.ndarray, xi: jnp.ndarray, wr: jnp.ndarray, wi: jnp.ndarray,
+               *, tile_b: int = DEFAULT_TILE_B, interpret: bool = False):
+    """Batched DFT planes (B, n) @ DFT matrix (n, n). B % tile_b may be != 0;
+    ops.py pads. n should be a multiple of the 128 lane width for peak MXU
+    use (smaller n still correct, just padded by Mosaic)."""
+    b, n = xr.shape
+    tile_b = min(tile_b, b)
+    assert b % tile_b == 0, f"batch {b} not divisible by tile {tile_b}"
+    grid = (b // tile_b,)
+    row_spec = pl.BlockSpec((tile_b, n), lambda i: (i, 0))
+    mat_spec = pl.BlockSpec((n, n), lambda i: (0, 0))
+    out_shape = [jax.ShapeDtypeStruct((b, n), xr.dtype)] * 2
+    yr, yi = pl.pallas_call(
+        _dft_kernel,
+        grid=grid,
+        in_specs=[row_spec, row_spec, mat_spec, mat_spec],
+        out_specs=[row_spec, row_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(xr, xi, wr, wi)
+    return yr, yi

@@ -1,0 +1,48 @@
+"""jit'd public wrapper for the dft_matmul kernel: complex API, padding."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.fft.reference import dft_matrix
+from .dft_matmul import dft_matmul, DEFAULT_TILE_B
+
+
+def _pad_rows(a: jnp.ndarray, mult: int) -> jnp.ndarray:
+    b = a.shape[0]
+    rem = (-b) % mult
+    if rem:
+        a = jnp.pad(a, ((0, rem), (0, 0)))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("inverse", "interpret", "tile_b"))
+def dft(x: jnp.ndarray, inverse: bool = False, *, interpret: bool = False,
+        tile_b: int = DEFAULT_TILE_B) -> jnp.ndarray:
+    """Direct DFT along the last axis via the Pallas MXU kernel.
+
+    x: complex, any batch shape, last-axis length n <= 128 recommended.
+    Forward unnormalized, inverse 1/n (numpy semantics).
+    """
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    n = x.shape[-1]
+    batch_shape = x.shape[:-1]
+    flat = x.reshape(-1, n)
+    b = flat.shape[0]
+
+    w = dft_matrix(n, inverse=inverse, dtype=jnp.complex128)
+    wr = jnp.real(w).astype(jnp.float32)
+    wi = jnp.imag(w).astype(jnp.float32)
+
+    tile = min(tile_b, max(8, b))
+    xr = _pad_rows(jnp.real(flat).astype(jnp.float32), tile)
+    xi = _pad_rows(jnp.imag(flat).astype(jnp.float32), tile)
+    yr, yi = dft_matmul(xr, xi, wr, wi, tile_b=tile, interpret=interpret)
+    y = (yr[:b] + 1j * yi[:b]).reshape(*batch_shape, n).astype(x.dtype)
+    if inverse:
+        y = y / n
+    return y

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the dft_matmul kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.fft.reference import dft_matrix
+
+
+def dft_ref(xr: jnp.ndarray, xi: jnp.ndarray, inverse: bool = False):
+    """Batched direct DFT on real/imag planes. x*: (B, n) float32.
+
+    Returns (yr, yi) each (B, n). Forward unnormalized; inverse has NO 1/n
+    (matches the kernel; callers normalize).
+    """
+    n = xr.shape[-1]
+    w = dft_matrix(n, inverse=inverse, dtype=jnp.complex128)
+    wr = jnp.real(w).astype(xr.dtype)
+    wi = jnp.imag(w).astype(xr.dtype)
+    # (x_r + i x_i) @ (W_r + i W_i); W symmetric so x @ W == W @ x convention-free
+    yr = xr @ wr - xi @ wi
+    yi = xr @ wi + xi @ wr
+    return yr, yi

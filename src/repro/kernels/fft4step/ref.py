@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fft4step kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.fft.reference import dft_matrix, twiddles
+
+
+def fft4step_ref(xr: jnp.ndarray, xi: jnp.ndarray, n1: int, n2: int,
+                 inverse: bool = False):
+    """Four-step FFT on planes. x*: (B, n1, n2) f32 (row-major signal view).
+
+    Returns (yr, yi) each (B, n2, n1) — the TRANSPOSED four-step output, i.e.
+    flattening the last two axes yields the natural-order spectrum.
+    Forward unnormalized, inverse without 1/n (callers normalize).
+    """
+    x = (xr + 1j * xi).astype(jnp.complex128)
+    w1 = dft_matrix(n1, inverse=inverse, dtype=jnp.complex128)
+    w2 = dft_matrix(n2, inverse=inverse, dtype=jnp.complex128)
+    t = twiddles(n1, n2, inverse=inverse, dtype=jnp.complex128)
+    b = jnp.einsum("kj,bjn->bkn", w1, x)          # column DFTs (over j1)
+    c = b * t                                      # twiddle
+    d = jnp.einsum("bkn,nm->bkm", c, w2)           # row DFTs (over j2)
+    d = jnp.swapaxes(d, -1, -2)                    # (B, n2, n1)
+    return jnp.real(d).astype(xr.dtype), jnp.imag(d).astype(xr.dtype)

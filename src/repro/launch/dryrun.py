@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes, record memory/cost/collective analysis for §Roofline.
+
+MUST keep the two lines above as the very first statements — jax locks the
+device count on first init.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+Outputs one JSON per cell under experiments/dryrun/.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (SHAPES, get_config, input_specs, list_configs,
+                                shape_supported)
+from repro.launch.mesh import make_production_mesh, dp_axes
+from repro.models.model import Model
+from repro.models.sharding import param_specs
+from repro.roofline.hlo_parse import analyze as hlo_analyze
+from repro.train.optimizer import init_opt_state, OptConfig
+from repro.train.trainer import build_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+OUT_DIR = os.path.abspath(os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                       "../../../experiments/dryrun"))
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_spec(mesh, specs: dict, cfg) -> dict:
+    dp = dp_axes(mesh)
+    out = {}
+    for k, s in specs.items():
+        if k == "pos":
+            out[k] = P()
+        elif s.shape and s.shape[0] % _size(mesh, dp) == 0 and s.shape[0] > 1:
+            out[k] = P(dp, *([None] * (len(s.shape) - 1)))
+        else:
+            out[k] = P(*([None] * len(s.shape)))
+    return out
+
+
+def _size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool, opt_level: str = "base"):
+    """Lower + compile one cell. Returns (record, compiled, lowered)."""
+    cfg = get_config(arch)
+    ok, why = shape_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "mesh": "multi" if multi_pod else "single",
+                "status": why}, None, None
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg, mesh=mesh, remat=True)
+    sp = SHAPES[shape]
+    specs = input_specs(cfg, shape)
+    rng = jax.random.PRNGKey(0)
+
+    t0 = time.perf_counter()
+    p_shapes = jax.eval_shape(model.init_params, rng)
+    pspecs = param_specs(p_shapes, mesh)
+    p_shard = _named(mesh, pspecs)
+    in_batch = {k: v for k, v in specs.items()}
+    b_spec = _batch_spec(mesh, specs, cfg)
+    b_shard = _named(mesh, jax.tree.map(lambda s: s, b_spec,
+                                        is_leaf=lambda x: isinstance(x, P)))
+
+    with mesh:
+        if sp.mode == "train":
+            o_shapes = jax.eval_shape(init_opt_state, p_shapes)
+            o_shard = {"m": p_shard, "v": p_shard,
+                       "step": NamedSharding(mesh, P())}
+            # Iteration 2 (EXPERIMENTS.md §Perf) tried microbatching alone
+            # (M=16): fits but 16x per-microbatch gradient reductions.
+            # Iteration 3: sequence-parallel activations (Sharder.sp) shrink
+            # the remat carries by the TP degree; a light M=4 covers the
+            # unsharded loss/logits transients. Tuned = SP + M=4
+            # (M=16 for the 90B VLM: 5-layer remat units hold 5x activations).
+            micro = 1
+            if opt_level != "paper":
+                micro = 16 if cfg.block_kind == "vlm" else 4
+                # each microbatch must still shard over dp
+                micro = min(micro, max(1, sp.global_batch // _size(mesh, dp_axes(mesh))))
+            step = build_train_step(model, OptConfig(), microbatches=micro)
+            fn = jax.jit(step,
+                         in_shardings=(p_shard, o_shard, b_shard),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(p_shapes, o_shapes, in_batch)
+        elif sp.mode == "prefill":
+            cache_shapes = model.cache_shapes(sp.global_batch, sp.seq_len)
+            cache_shard = _named(mesh, model.cache_specs(sp.global_batch,
+                                                         sp.seq_len))
+            def prefill(params, tokens, cache, image_embeds=None):
+                return model.prefill(params, tokens, cache,
+                                     image_embeds=image_embeds)
+            args = [p_shapes, specs["tokens"], cache_shapes]
+            shards = [p_shard, b_shard["tokens"], cache_shard]
+            if "image_embeds" in specs:
+                args.append(specs["image_embeds"])
+                shards.append(b_shard["image_embeds"])
+            fn = jax.jit(prefill, in_shardings=tuple(shards),
+                         donate_argnums=(2,))
+            lowered = fn.lower(*args)
+        else:  # decode
+            cache_shapes = model.cache_shapes(sp.global_batch, sp.seq_len)
+            cache_shard = _named(mesh, model.cache_specs(sp.global_batch,
+                                                         sp.seq_len))
+            def decode(params, tokens, cache, pos, image_embeds=None):
+                return model.decode_step(params, tokens, cache, pos,
+                                         image_embeds=image_embeds)
+            args = [p_shapes, specs["tokens"], cache_shapes, specs["pos"]]
+            shards = [p_shard, b_shard["tokens"], cache_shard,
+                      NamedSharding(mesh, P())]
+            if "image_embeds" in specs:
+                args.append(specs["image_embeds"])
+                shards.append(b_shard["image_embeds"])
+            fn = jax.jit(decode, in_shardings=tuple(shards),
+                         donate_argnums=(2,))
+            lowered = fn.lower(*args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = hlo_analyze(compiled.as_text())
+    record = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "mode": sp.mode,
+        "opt_level": opt_level,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": _mem_dict(mem),
+        # raw cost_analysis (NOT loop-aware — kept for reference)
+        "xla_flops_per_device": cost.get("flops", 0.0),
+        "xla_bytes_per_device": cost.get("bytes accessed", 0.0),
+        # loop-aware reconstruction (roofline/hlo_parse.py)
+        "flops_per_device": hlo["dot_flops"],
+        "dot_bytes_per_device": hlo["dot_bytes"],
+        "collectives": {"total_bytes": hlo["collective_total"],
+                        "by_kind": hlo["collective_bytes"],
+                        "counts": hlo["collective_counts"]},
+    }
+    return record, compiled, lowered
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        try:
+            out[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True,
+             opt_level: str = "tuned"):
+    try:
+        record, compiled, _ = lower_cell(arch, shape, multi_pod, opt_level)
+    except Exception as e:
+        record = {"arch": arch, "shape": shape,
+                  "mesh": "2x16x16" if multi_pod else "16x16",
+                  "status": f"ERROR: {type(e).__name__}: {e}",
+                  "trace": traceback.format_exc()[-2000:]}
+        compiled = None
+    os.makedirs(OUT_DIR, exist_ok=True)
+    tag = f"{arch}_{shape}_{record['mesh'].replace('x', '-')}.json"
+    with open(os.path.join(OUT_DIR, tag), "w") as f:
+        json.dump(record, f, indent=1)
+    if verbose:
+        st = record["status"]
+        extra = ""
+        if st == "ok":
+            mem_gb = record["memory"].get("argument_size_in_bytes", 0) / 2**30
+            extra = (f" compile={record['compile_s']:.0f}s "
+                     f"args/dev={mem_gb:.2f}GiB "
+                     f"flops/dev={record['flops_per_device']:.3g} "
+                     f"coll/dev={record['collectives']['total_bytes']/2**20:.0f}MiB")
+        print(f"[dryrun] {arch} x {shape} x {record['mesh']}: {st}{extra}",
+              flush=True)
+    return record
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--opt-level", default="tuned", choices=["paper", "tuned"])
+    ap.add_argument("--out-dir", default=None)
+    args = ap.parse_args(argv)
+    global OUT_DIR
+    if args.out_dir:
+        OUT_DIR = os.path.abspath(args.out_dir)
+
+    archs = list_configs() if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+    meshes = [False, True] if (args.both_meshes or (args.all and not args.multi_pod)) \
+        else [args.multi_pod]
+
+    n_bad = 0
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, mp, opt_level=args.opt_level)
+                if str(rec["status"]).startswith("ERROR"):
+                    n_bad += 1
+    print(f"[dryrun] done, {n_bad} failures")
+    return 1 if n_bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

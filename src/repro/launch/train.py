@@ -1,0 +1,71 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+      --reduced --steps 200 --batch 8 --seq 128
+
+--reduced trains the smoke-size config on CPU (the examples use this);
+full-size configs on a real pod use the same entry point with --mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import get_config
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.launch.mesh import make_mesh
+from repro.models.model import Model
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. '4x2' => data x model over visible devices")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = None
+    if args.mesh:
+        shape = tuple(int(v) for v in args.mesh.split("x"))
+        axes = ("data", "model")[:len(shape)] if len(shape) <= 2 \
+            else ("pod", "data", "model")
+        mesh = make_mesh(shape, axes)
+
+    model = Model(cfg, mesh=mesh, remat=not args.reduced)
+    data = SyntheticTokens(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, seed=args.seed,
+        n_codebooks=cfg.n_codebooks))
+    tcfg = TrainConfig(
+        steps=args.steps, microbatches=args.microbatches,
+        checkpoint_every=args.checkpoint_every,
+        checkpoint_dir=args.checkpoint_dir,
+        grad_compression=args.grad_compression,
+        opt=OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                      total_steps=args.steps))
+    trainer = Trainer(model, data, tcfg, mesh=mesh)
+    out = trainer.run(rng=jax.random.PRNGKey(args.seed))
+    print(f"[train] finished at step {out['step']} loss={out['loss']:.4f} "
+          f"stragglers={out['stragglers']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

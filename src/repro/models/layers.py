@@ -1,0 +1,104 @@
+"""Shared model layers — functional style: params are plain dict pytrees,
+every layer is ``fn(params, x, ...) -> y`` plus an ``init_*`` returning the
+param tree.  No framework dependency; scan-over-layers stacks these trees.
+
+Conventions:
+- compute dtype is the activation dtype (bf16 in production configs);
+  reductions (norms, softmax) in float32.
+- weights are stored in ``param_dtype`` (f32) and cast at use; the sharding
+  rules in models/sharding.py match on the param path names used here.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+def _init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norm
+# --------------------------------------------------------------------------
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# dense / mlp
+# --------------------------------------------------------------------------
+def init_dense(key, d_in: int, d_out: int, scale: float | None = None) -> Params:
+    return {"w": _init(key, (d_in, d_out), scale)}
+
+
+def dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["w"].astype(x.dtype)
+
+
+def init_mlp(key, d: int, d_ff: int, gated: bool = True) -> Params:
+    ks = jax.random.split(key, 3)
+    p: Params = {"up": init_dense(ks[0], d, d_ff),
+                 "down": init_dense(ks[1], d_ff, d)}
+    if gated:
+        p["gate"] = init_dense(ks[2], d, d_ff)
+    return p
+
+
+def mlp(p: Params, x: jnp.ndarray, *, gated: bool = True,
+        act: str = "silu") -> jnp.ndarray:
+    a = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[act]
+    up = dense(p["up"], x)
+    h = a(dense(p["gate"], x)) * up if gated else a(up)
+    return dense(p["down"], h)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+def rope_table(positions: jnp.ndarray, head_dim: int,
+               theta: float = 1e4) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for given integer positions: each (..., head_dim/2)."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, H, D); cos/sin: (S, D/2) (or broadcastable)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)  # broadcast over head axis
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# embeddings
+# --------------------------------------------------------------------------
+def init_embedding(key, vocab: int, d: int) -> Params:
+    return {"table": _init(key, (vocab, d), scale=1.0)}
+
+
+def embed(p: Params, tokens: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits against the embedding table (or a separate lm head table)."""
+    return x @ p["table"].astype(x.dtype).T

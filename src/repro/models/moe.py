@@ -1,0 +1,108 @@
+"""Mixture-of-Experts FFN with token-choice top-k routing.
+
+Expert parallelism strategy (DESIGN.md §6): activations between blocks are
+replicated over the 'model' axis (Megatron TP convention), so each model-rank
+selects the tokens routed to ITS local experts, runs the expert FFNs on a
+static-capacity buffer, scatters weighted outputs back, and one psum over
+'model' completes the layer — the same collective volume as a dense TP MLP,
+with no (T, E, C) GShard dispatch tensor (the classical memory hog).
+
+Dispatch is sort-free: per local expert, a cumsum over the routing mask gives
+each token its capacity slot; overflow tokens are dropped (capacity_factor
+bounds drops, aux loss balances).  All shapes static -> compiles at any mesh.
+
+Two entry modes:
+  ep_axis=None : single-device / data-parallel-only (smoke tests); local
+                 experts == all experts, no collective.
+  ep_axis='model' (under shard_map): params arrive pre-sliced (E_local, ...)
+                 and the output psum runs over the axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, _init
+
+
+def init_moe(key, d: int, d_ff: int, n_experts: int, n_shared: int = 0,
+             d_ff_shared: int | None = None) -> Params:
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": {"w": _init(ks[0], (d, n_experts), scale=d ** -0.5)},
+        "up": _init(ks[1], (n_experts, d, d_ff)),
+        "gate": _init(ks[2], (n_experts, d, d_ff)),
+        "down": _init(ks[3], (n_experts, d_ff, d)),
+    }
+    if n_shared:
+        dffs = d_ff_shared or d_ff * n_shared
+        from .layers import init_mlp
+        p["shared"] = init_mlp(ks[4], d, dffs, gated=True)
+    return p
+
+
+def _route(router_w: jnp.ndarray, x: jnp.ndarray, top_k: int):
+    """x: (T, d) -> (top_idx (T,k), top_w (T,k) normalized, aux_loss)."""
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, top_k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    e = router_w.shape[-1]
+    me = jnp.mean(probs, axis=0)
+    one_hot = jax.nn.one_hot(top_idx, e, dtype=jnp.float32).sum(1)  # (T, E)
+    fe = jnp.mean(one_hot, axis=0)
+    aux = e * jnp.sum(fe * me)
+    return top_idx, top_w.astype(x.dtype), aux
+
+
+def moe_ffn(p: Params, x: jnp.ndarray, *, top_k: int, capacity_factor: float = 1.25,
+            ep_axis: str | None = None, expert_offset: int = 0,
+            n_experts_total: int | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d). Returns (y, aux_loss).
+
+    Expert weights in ``p`` have leading dim E_local; with ep_axis set they
+    are this rank's slice [expert_offset : expert_offset+E_local] of the
+    global expert table and y is psum'd over ep_axis.
+    """
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    e_local = p["up"].shape[0]
+    e_total = n_experts_total or e_local
+    top_idx, top_w, aux = _route(p["router"]["w"], xt, top_k)
+    cap = int(t * top_k / e_total * capacity_factor) or 1
+
+    def one_expert(wu, wg, wd, eid):
+        sel = (top_idx == eid)                       # (T, k)
+        w_tok = (top_w * sel).sum(-1)                # (T,)
+        routed = sel.any(-1)                         # (T,)
+        pos = jnp.cumsum(routed) - 1                 # slot per routed token
+        keep = routed & (pos < cap)
+        slot = jnp.where(keep, pos, cap)             # overflow -> trash row
+        buf = jnp.zeros((cap + 1, d), xt.dtype).at[slot].set(
+            jnp.where(keep[:, None], xt, 0))
+        h = jax.nn.silu(buf @ wg.astype(xt.dtype)) * (buf @ wu.astype(xt.dtype))
+        out = h @ wd.astype(xt.dtype)                # (cap+1, d_model)
+        y_tok = out[slot] * (keep * w_tok)[:, None]  # gather back, weight
+        return y_tok
+
+    eids = expert_offset + jnp.arange(e_local)
+    y = jax.lax.map(
+        lambda args: one_expert(*args),
+        (p["up"], p["gate"], p["down"], eids)).sum(0)
+
+    if "shared" in p:
+        # with ep_axis set the shared-expert weights are TP-sharded on d_ff,
+        # so its output is PARTIAL and must ride the same psum as the routed
+        # experts; single-device it is simply the full shared MLP.
+        from .layers import mlp
+        y = y + mlp(p["shared"], x, gated=True).reshape(t, d)
+
+    if ep_axis is not None:
+        y = jax.lax.psum(y, ep_axis)
+        aux = jax.lax.pmean(aux, ep_axis)
+    return y.reshape(b, s, d), aux

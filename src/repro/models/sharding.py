@@ -1,0 +1,209 @@
+"""Sharding rules: param-path -> PartitionSpec, plus activation constraint
+helpers.
+
+Baseline layout (DESIGN.md §6): Megatron tensor parallelism on the 'model'
+axis (attention heads / d_ff / experts / vocab), ZeRO-3 FSDP on the 'data'
+axis (the largest non-TP dim of every weight), batch over ('pod','data').
+XLA GSPMD materializes the ZeRO all-gathers just-in-time because weights are
+sharded on 'data' while activations are batch-sharded on it.
+
+Everything dispatches on leaf *path names* produced by the layer inits in
+models/layers.py — no framework metadata needed.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+TP = "model"
+FSDP = "data"
+
+
+def _rule(path: str, shape: tuple[int, ...]) -> P:
+    """PartitionSpec for one param. ``path`` is '/'-joined key path."""
+    nd = len(shape)
+    leaf = path.rsplit("/", 1)[-1]
+
+    # --- embeddings & heads: (V, d) vocab-TP, d-FSDP
+    if "table" in leaf or "embed" in path or "lm_head" in path:
+        return P(TP, FSDP) if nd == 2 else P(None)
+    if "meta_tokens" in path:
+        return P(None, None)
+
+    # --- MoE expert stacks: (E, d, ff) / (E, ff, d) (+ optional layer dim)
+    if any(k in path for k in ("moe/up", "moe/gate", "moe/down")):
+        if nd == 3:
+            return P(TP, None, FSDP)
+        if nd == 4:  # scanned: (L, E, ...)
+            return P(None, TP, None, FSDP)
+    if "router" in path:
+        return P(*([None] * nd))
+
+    # --- attention projections
+    if leaf == "w":
+        if any(k in path for k in ("wq", "wk", "wv", "in_up", "in_proj",
+                                   "up", "gate", "wx")):
+            # (d_in, big) -> TP on the wide output dim, FSDP on input dim
+            if nd == 2:
+                return P(FSDP, TP)
+            if nd == 3:  # scanned (L, d_in, big)
+                return P(None, FSDP, TP)
+        if any(k in path for k in ("wo", "down", "out", "out_proj", "wuk",
+                                   "wuv")):
+            # (big, d_out) -> TP on input dim, FSDP on output dim
+            if nd == 2:
+                return P(TP, FSDP)
+            if nd == 3:
+                return P(None, TP, FSDP)
+        if "wdkv" in path or "w_dt" in path or "wx_bc" in path or "wx_dt" in path:
+            if nd == 2:
+                return P(FSDP, None)
+            if nd == 3:
+                return P(None, FSDP, None)
+        if "rh" in path:  # (H, dh, 4dh) slstm recurrence
+            return P(*([None] * nd)) if nd < 3 else P(*([None] * (nd - 3)), TP, None, None)
+        if "conv" in path:
+            return P(*([None] * nd))
+        # fallback 2D: FSDP x TP
+        if nd >= 2:
+            return P(*([None] * (nd - 2)), FSDP, TP)
+    # --- norms, biases, gates, scalars: replicate
+    return P(*([None] * nd))
+
+
+def _fit_to_mesh(spec: P, shape: tuple[int, ...], mesh: Mesh | None) -> P:
+    """Drop sharded axes whose mesh size does not divide the dim (odd vocab
+    sizes like 49155, small head counts); keeps the rest of the spec."""
+    if mesh is None:
+        return spec
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(entry if dim % size == 0 else None)
+    return P(*out)
+
+
+def param_specs(params: Any, mesh: Mesh | None = None) -> Any:
+    """Pytree of PartitionSpecs matching ``params`` (mesh-divisibility
+    checked when a mesh is given)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    paths = ["/".join(_key_str(k) for k in kp) for kp, _ in flat]
+    specs = [_fit_to_mesh(_rule(p, np.shape(v)), np.shape(v), mesh)
+             for p, (_, v) in zip(paths, flat)]
+    tree = jax.tree_util.tree_structure(params)
+    return jax.tree_util.tree_unflatten(tree, specs)
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+class Sharder:
+    """Activation-constraint helper; identity when no mesh is active."""
+
+    def __init__(self, mesh: Mesh | None = None, dp=("data",), tp: str = TP,
+                 pod_in_dp: bool = True):
+        self.mesh = mesh
+        if mesh is not None and pod_in_dp and "pod" in mesh.axis_names:
+            dp = ("pod",) + tuple(a for a in dp if a != "pod")
+        self.dp = tuple(dp)
+        self.tp = tp
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        out = 1
+        for a in self.dp:
+            out *= self.mesh.shape[a]
+        return out
+
+    def __call__(self, x, *spec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def batch(self, x):
+        """Shard dim 0 over dp axes (if divisible), rest replicated."""
+        if self.mesh is None:
+            return x
+        if x.shape[0] % self.dp_size == 0:
+            return self(x, self.dp, *([None] * (x.ndim - 1)))
+        return x
+
+    sp = True  # sequence-parallel residual stream (Megatron-SP layout)
+
+    def acts(self, x):
+        """(B, S, d) activations between blocks: batch over dp; with SP the
+        sequence axis is additionally sharded over tp, so scan-over-layers
+        carries (the dominant remat memory) shrink by the TP degree."""
+        if self.mesh is None:
+            return x
+        b_ok = x.shape[0] % self.dp_size == 0 and x.shape[0] > 1
+        s_ok = (self.sp and x.ndim >= 3 and
+                x.shape[1] % self.mesh.shape[self.tp] == 0 and x.shape[1] > 1)
+        if not b_ok and not s_ok:
+            return x
+        return self(x, self.dp if b_ok else None,
+                    self.tp if s_ok else None, *([None] * (x.ndim - 2)))
+
+    def heads(self, x):
+        """(B, S, H, dh): batch over dp, heads over tp."""
+        if self.mesh is None:
+            return x
+        b_ok = x.shape[0] % self.dp_size == 0
+        h_ok = x.shape[2] % self.mesh.shape[self.tp] == 0
+        return self(x, self.dp if b_ok else None, None,
+                    self.tp if h_ok else None, None)
+
+    def kv_cache_spec(self, shape, batch_axis: int = 1, seq_axis: int = 2,
+                      head_axis: int | None = 3) -> P:
+        """Spec for a stacked cache (L, B, Smax, KH, dh) [axes configurable]:
+        batch over dp if divisible, else sequence over dp (long-context
+        decode); heads over tp when divisible, else the sequence axis takes
+        tp too (few-KV-head models at 32k x 128 would not fit otherwise)."""
+        if self.mesh is None:
+            return P()
+        specs: list = [None] * len(shape)
+        if shape[batch_axis] % self.dp_size == 0 and shape[batch_axis] > 1:
+            specs[batch_axis] = self.dp
+        elif shape[seq_axis] % self.dp_size == 0:
+            specs[seq_axis] = self.dp
+        tp_n = self.mesh.shape[self.tp]
+        if head_axis is not None and shape[head_axis] % tp_n == 0:
+            specs[head_axis] = self.tp
+        elif specs[seq_axis] is None and shape[seq_axis] % tp_n == 0:
+            specs[seq_axis] = self.tp
+        elif specs[seq_axis] == self.dp and shape[seq_axis] % (self.dp_size * tp_n) == 0:
+            specs[seq_axis] = (*self.dp, self.tp)
+        return P(*specs)
+
+    def kv_cache(self, x, batch_axis: int = 1, seq_axis: int = 2,
+                 head_axis: int | None = 3):
+        if self.mesh is None:
+            return x
+        spec = self.kv_cache_spec(x.shape, batch_axis, seq_axis, head_axis)
+        return self(x, *spec)
+
+    def logits(self, x):
+        if self.mesh is None:
+            return x
+        b_ok = x.shape[0] % self.dp_size == 0
+        v_ok = x.shape[-1] % self.mesh.shape[self.tp] == 0
+        return self(x, self.dp if b_ok else None,
+                    *([None] * (x.ndim - 2)), self.tp if v_ok else None)

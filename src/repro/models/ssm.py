@@ -1,0 +1,367 @@
+"""Recurrent sequence mixers: xLSTM (mLSTM + sLSTM) and Mamba-style SSM.
+
+All are O(S) in sequence length with O(1) decode state — these are the
+architectures the long_500k shape runs on (DESIGN.md §5).
+
+mLSTM: matrix-memory LSTM with exponential gating (arXiv:2405.04517).
+  Training uses the stabilized CHUNKWISE form: quadratic attention within a
+  chunk (MXU-friendly), exact recurrent state handoff between chunks via
+  lax.scan; numerically stabilized with running max-exponents (the paper's
+  m-state).  Decode uses the O(1) recurrent update.
+
+sLSTM: scalar-memory LSTM with hidden-to-hidden recurrence -> inherently
+  sequential; lax.scan over time (block-diagonal per-head recurrence).
+
+Mamba: selective SSM (input-dependent dt/B/C, diagonal A). Chunked
+  associative scan: parallel within chunks, scanned across chunks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, _init, init_dense, dense
+
+F32 = jnp.float32
+
+
+# ==========================================================================
+# causal depthwise conv (mamba/mLSTM front conv)
+# ==========================================================================
+def init_conv1d(key, d: int, k: int) -> Params:
+    return {"w": _init(key, (k, d), scale=k ** -0.5)}
+
+
+def conv1d(p: Params, x: jnp.ndarray, state: jnp.ndarray | None = None):
+    """x: (B, S, D) causal depthwise conv; state: (B, k-1, D) history for
+    decode. Returns (y, new_state)."""
+    k = p["w"].shape[0]
+    w = p["w"].astype(x.dtype)
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros_like(x[:, :0])
+    return y, new_state
+
+
+# ==========================================================================
+# mLSTM
+# ==========================================================================
+def init_mlstm(key, d: int, n_heads: int, proj_factor: float = 2.0,
+               conv_k: int = 4) -> Params:
+    di = int(d * proj_factor)
+    ks = jax.random.split(key, 8)
+    return {
+        "in_up": init_dense(ks[0], d, 2 * di),          # x branch + gate branch
+        "conv": init_conv1d(ks[1], di, conv_k),
+        "wq": init_dense(ks[2], di, di),
+        "wk": init_dense(ks[3], di, di),
+        "wv": init_dense(ks[4], di, di),
+        "wif": {"w": _init(ks[5], (di, 2 * n_heads), scale=di ** -0.5),
+                "b": jnp.concatenate([jnp.zeros((n_heads,), F32),
+                                      3.0 * jnp.ones((n_heads,), F32)])},
+        "skip": init_dense(ks[6], di, di),
+        "out": init_dense(ks[7], di, d),
+        "mnorm": {"scale": jnp.ones((di,), F32)},
+    }
+
+
+def _mlstm_chunk(q, k, v, li, lf, state):
+    """One stabilized chunk. q,k,v: (B,H,L,dh) f32; li,lf: (B,H,L) f32 logs.
+    state = (C (B,H,dh,dh), n (B,H,dh), m (B,H)). Returns (h, new_state)."""
+    L = q.shape[2]
+    cum = jnp.cumsum(lf, axis=-1)                      # (B,H,L)
+    total = cum[..., -1:]
+    m_prev = state[2][..., None]                       # (B,H,1)
+
+    # intra-chunk exponents D[a,b] = cum[a] - cum[b] + li[b]  (a >= b)
+    dmat = cum[..., :, None] - cum[..., None, :] + li[..., None, :]
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    dmat = jnp.where(causal, dmat, -jnp.inf)
+    # inter exponent for query a: cum[a] + m_prev
+    g = cum + m_prev                                   # (B,H,L)
+    m_q = jnp.maximum(jnp.max(dmat, axis=-1), g)       # (B,H,L)
+
+    scale = q.shape[-1] ** -0.5
+    w_exp = jnp.exp(dmat - m_q[..., None])              # gate weights only
+    scores = jnp.einsum("bhad,bhcd->bhac", q, k) * scale
+    w_intra = scores * w_exp
+    h_intra = jnp.einsum("bhac,bhcd->bhad", w_intra, v)
+    qc = jnp.einsum("bhad,bhde->bhae", q * scale, state[0])
+    h_inter = qc * jnp.exp(g - m_q)[..., None]
+    num = h_intra + h_inter
+
+    # normalizer state uses the GATE weights only (q enters once, via the
+    # final |q . n| dot) — matches the recurrent form n_t = f n + i k
+    n_intra = jnp.einsum("bhac,bhcd->bhad", w_exp, k)
+    n_inter = state[1][..., None, :] * jnp.exp(g - m_q)[..., None]
+    # denominator: max(|q . n|, exp(-m_q)) in stabilized units
+    dot = jnp.einsum("bhad,bhad->bha", q * scale, n_intra + n_inter)
+    den = jnp.maximum(jnp.abs(dot), jnp.exp(-m_q))
+    h = num / den[..., None]
+
+    # state handoff
+    a_b = total - cum + li                             # (B,H,L)
+    m_new = jnp.maximum(state[2] + total[..., 0], jnp.max(a_b, axis=-1))
+    carry_scale = jnp.exp(state[2] + total[..., 0] - m_new)
+    w_state = jnp.exp(a_b - m_new[..., None])          # (B,H,L)
+    c_new = state[0] * carry_scale[..., None, None] + \
+        jnp.einsum("bhld,bhle->bhde", k * w_state[..., None], v)
+    n_new = state[1] * carry_scale[..., None] + (k * w_state[..., None]).sum(2)
+    return h, (c_new, n_new, m_new)
+
+
+def mlstm_sequence(p: Params, x: jnp.ndarray, n_heads: int,
+                   chunk: int = 128, state: dict | None = None,
+                   return_state: bool = False):
+    """Full-sequence mLSTM block (training/prefill). x: (B, S, d).
+    ``state`` (the decode-cache dict) seeds the recurrence; with
+    ``return_state`` the final (c, n, m, conv) is returned so prefill hands
+    off to decode."""
+    b, s, d = x.shape
+    up = dense(p["in_up"], x)
+    di = up.shape[-1] // 2
+    xb, zb = up[..., :di], up[..., di:]
+    conv_in = state["conv"].astype(xb.dtype) if state is not None else None
+    cx, conv_state = conv1d(p["conv"], xb, conv_in)
+    cx = jax.nn.silu(cx)
+    dh = di // n_heads
+
+    def heads(t):
+        return t.reshape(b, s, n_heads, dh).transpose(0, 2, 1, 3).astype(F32)
+
+    q, k = heads(dense(p["wq"], cx)), heads(dense(p["wk"], cx))
+    v = heads(dense(p["wv"], xb))
+    gates = (xb.astype(F32) @ p["wif"]["w"]) + p["wif"]["b"]
+    li = gates[..., :n_heads].transpose(0, 2, 1)           # log input gate (pre-exp)
+    lf = jax.nn.log_sigmoid(gates[..., n_heads:]).transpose(0, 2, 1)
+
+    lc = min(chunk, s)
+    nchunks = -(-s // lc)
+    pad = nchunks * lc - s
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0))) for t in (q, k, v))
+        li = jnp.pad(li, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+        lf = jnp.pad(lf, ((0, 0), (0, 0), (0, pad)))
+
+    def split(t):
+        return jnp.moveaxis(t.reshape(b, n_heads, nchunks, lc, *t.shape[3:]), 2, 0)
+
+    if state is not None:
+        state0 = (state["c"].astype(F32), state["n"].astype(F32),
+                  state["m"].astype(F32))
+    else:
+        state0 = (jnp.zeros((b, n_heads, dh, dh), F32),
+                  jnp.zeros((b, n_heads, dh), F32),
+                  jnp.full((b, n_heads), -1e30, F32))
+
+    def step(st, inp):
+        qc, kc, vc, lic, lfc = inp
+        h, st = _mlstm_chunk(qc, kc, vc, lic, lfc, st)
+        return st, h
+
+    state_f, hs = jax.lax.scan(step, state0, (split(q), split(k), split(v),
+                                              split(li), split(lf)))
+    h = jnp.moveaxis(hs, 0, 2).reshape(b, n_heads, nchunks * lc, dh)[:, :, :s]
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, di)
+    # head-wise norm + learnable skip + output gate
+    from .layers import rms_norm
+    h = rms_norm(p["mnorm"], h.astype(x.dtype))
+    h = h + dense(p["skip"], cx)
+    h = h * jax.nn.silu(zb)
+    y = dense(p["out"], h)
+    if return_state:
+        new_state = {"c": state_f[0], "n": state_f[1], "m": state_f[2],
+                     "conv": conv_state.astype(F32)}
+        return y, new_state
+    return y
+
+
+def mlstm_decode_init(b: int, n_heads: int, di: int, conv_k: int, dtype=F32):
+    dh = di // n_heads
+    return {"c": jnp.zeros((b, n_heads, dh, dh), dtype),
+            "n": jnp.zeros((b, n_heads, dh), dtype),
+            "m": jnp.full((b, n_heads), -1e30, dtype),
+            "conv": jnp.zeros((b, conv_k - 1, di), dtype)}
+
+
+def mlstm_decode(p: Params, x: jnp.ndarray, cache: dict, n_heads: int):
+    """One-token step. x: (B, 1, d). Returns (y, cache)."""
+    b = x.shape[0]
+    up = dense(p["in_up"], x)
+    di = up.shape[-1] // 2
+    xb, zb = up[..., :di], up[..., di:]
+    cx, conv_state = conv1d(p["conv"], xb, cache["conv"].astype(xb.dtype))
+    cx = jax.nn.silu(cx)
+    dh = di // n_heads
+    hshape = (b, n_heads, dh)
+    q = dense(p["wq"], cx)[:, 0].reshape(hshape).astype(F32) * dh ** -0.5
+    k = dense(p["wk"], cx)[:, 0].reshape(hshape).astype(F32)
+    v = dense(p["wv"], xb)[:, 0].reshape(hshape).astype(F32)
+    gates = (xb[:, 0].astype(F32) @ p["wif"]["w"]) + p["wif"]["b"]
+    li, lf = gates[..., :n_heads], jax.nn.log_sigmoid(gates[..., n_heads:])
+    m_new = jnp.maximum(lf + cache["m"], li)
+    fs = jnp.exp(lf + cache["m"] - m_new)[..., None]
+    is_ = jnp.exp(li - m_new)[..., None]
+    c = cache["c"] * fs[..., None] + is_[..., None] * k[..., :, None] * v[..., None, :]
+    n = cache["n"] * fs + is_ * k
+    num = jnp.einsum("bhd,bhde->bhe", q, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)),
+                      jnp.exp(-m_new))[..., None]
+    h = (num / den).reshape(b, 1, di)
+    from .layers import rms_norm
+    h = rms_norm(p["mnorm"], h.astype(x.dtype))
+    h = h + dense(p["skip"], cx)
+    h = h * jax.nn.silu(zb)
+    new_cache = {"c": c, "n": n, "m": m_new, "conv": conv_state}
+    return dense(p["out"], h), new_cache
+
+
+# ==========================================================================
+# sLSTM
+# ==========================================================================
+def init_slstm(key, d: int, n_heads: int) -> Params:
+    dh = d // n_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wx": {"w": _init(ks[0], (d, 4 * d), scale=d ** -0.5)},
+        "rh": {"w": _init(ks[1], (n_heads, dh, 4 * dh), scale=dh ** -0.5)},
+        "bias": jnp.concatenate([jnp.zeros((2 * d,), F32),
+                                 3.0 * jnp.ones((d,), F32),
+                                 jnp.zeros((d,), F32)]),
+        "gnorm": {"scale": jnp.ones((d,), F32)},
+        "up": init_dense(ks[2], d, int(d * 4 / 3)),
+        "down": init_dense(ks[3], int(d * 4 / 3), d),
+    }
+
+
+def slstm_sequence(p: Params, x: jnp.ndarray, n_heads: int,
+                   state: dict | None = None):
+    """x: (B, S, d) scanned over time (true recurrence). Returns (y, state)."""
+    b, s, d = x.shape
+    dh = d // n_heads
+    wx = (x.astype(F32) @ p["wx"]["w"]) + p["bias"]      # (B,S,4d)
+    wx = wx.reshape(b, s, 4, n_heads, dh)
+
+    if state is None:
+        z = jnp.zeros((b, n_heads, dh), F32)
+        state = {"c": z, "n": z, "h": z, "m": jnp.full((b, n_heads, dh), -1e30, F32)}
+
+    rh = p["rh"]["w"]  # (H, dh, 4dh)
+
+    def step(st, wxt):
+        rec = jnp.einsum("bhd,hde->bhe", st["h"], rh).reshape(b, n_heads, 4, dh)
+        zi = jnp.tanh(wxt[:, 0] + rec[:, :, 0])
+        ii = wxt[:, 1] + rec[:, :, 1]
+        ff = wxt[:, 2] + rec[:, :, 2]
+        oo = jax.nn.sigmoid(wxt[:, 3] + rec[:, :, 3])
+        lf = jax.nn.log_sigmoid(ff)
+        m_new = jnp.maximum(lf + st["m"], ii)
+        fs = jnp.exp(lf + st["m"] - m_new)
+        is_ = jnp.exp(ii - m_new)
+        c = fs * st["c"] + is_ * zi
+        n = fs * st["n"] + is_
+        h = oo * c / jnp.maximum(jnp.abs(n), jnp.exp(-m_new))
+        return {"c": c, "n": n, "h": h, "m": m_new}, h
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    from .layers import rms_norm
+    h = rms_norm(p["gnorm"], h)
+    y = dense(p["down"], jax.nn.gelu(dense(p["up"], h)))
+    return y, state
+
+
+# ==========================================================================
+# Mamba (selective SSM)
+# ==========================================================================
+def init_mamba(key, d: int, d_inner: int, state: int = 16, conv_k: int = 4,
+               dt_rank: int | None = None) -> Params:
+    dt_rank = dt_rank or max(1, d // 16)
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": init_dense(ks[0], d, 2 * d_inner),
+        "conv": init_conv1d(ks[1], d_inner, conv_k),
+        "wx_bc": init_dense(ks[2], d_inner, 2 * state),
+        "wx_dt": init_dense(ks[3], d_inner, dt_rank),
+        "w_dt": {"w": _init(ks[4], (dt_rank, d_inner), scale=dt_rank ** -0.5),
+                 "b": jnp.log(jnp.expm1(0.01)) * jnp.ones((d_inner,), F32)},
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, state + 1, dtype=F32), (d_inner, 1))),
+        "d_skip": jnp.ones((d_inner,), F32),
+        "out_proj": init_dense(ks[5], d_inner, d),
+    }
+
+
+def _mamba_scan(decay, binp, h0, chunk: int):
+    """h_t = decay_t * h_{t-1} + binp_t, scanned in chunks.
+    decay/binp: (B, S, di, st) f32; h0: (B, di, st). Returns (hs, h_final)."""
+    b, s, di, st = decay.shape
+    lc = min(chunk, s)
+    nch = -(-s // lc)
+    pad = nch * lc - s
+    if pad:
+        decay = jnp.pad(decay, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                        constant_values=1.0)
+        binp = jnp.pad(binp, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dec = jnp.moveaxis(decay.reshape(b, nch, lc, di, st), 1, 0)
+    bin_ = jnp.moveaxis(binp.reshape(b, nch, lc, di, st), 1, 0)
+
+    def assoc(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    def step(h, inp):
+        d_c, b_c = inp
+        acc_d, acc_b = jax.lax.associative_scan(assoc, (d_c, b_c), axis=1)
+        hs = acc_d * h[:, None] + acc_b           # (B, lc, di, st)
+        return hs[:, -1], hs
+
+    h_final, chunks = jax.lax.scan(step, h0, (dec, bin_))
+    hs = jnp.moveaxis(chunks, 0, 1).reshape(b, nch * lc, di, st)[:, :s]
+    return hs, h_final
+
+
+def mamba_mix(p: Params, x: jnp.ndarray, conv_state=None, ssm_state=None,
+              chunk: int = 128, sharder=None):
+    """Mamba mixer. x: (B,S,d). Returns (y, (conv_state, ssm_state)).
+    States given -> decode mode (S small, typically 1).
+    sharder: shard the d_inner channel axis over TP — the (B,S,di,st) scan
+    tensors are the hybrid archs' dominant activation memory."""
+    b, s, _ = x.shape
+    di = p["in_proj"]["w"].shape[-1] // 2
+    st = p["a_log"].shape[-1]
+
+    def ch(t):  # channel-shard (last-but-one or last axis == di)
+        if sharder is None or sharder.mesh is None or \
+           di % sharder.mesh.shape[sharder.tp]:
+            return t
+        ax = t.ndim - 1 - (1 if t.shape[-1] == st else 0)
+        spec = [None] * t.ndim
+        if t.shape[0] % sharder.dp_size == 0 and t.shape[0] > 1:
+            spec[0] = sharder.dp
+        spec[ax] = sharder.tp
+        return sharder(t, *spec)
+
+    xz = dense(p["in_proj"], x)
+    xb, z = xz[..., :di], xz[..., di:]
+    cx, conv_state = conv1d(p["conv"], ch(xb), conv_state)
+    cx = jax.nn.silu(cx)
+
+    bc = dense(p["wx_bc"], cx).astype(F32)
+    bmat, cmat = bc[..., :st], bc[..., st:]
+    dt = dense(p["wx_dt"], cx).astype(F32) @ p["w_dt"]["w"] + p["w_dt"]["b"]
+    dt = jax.nn.softplus(dt)                                  # (B,S,di)
+    a = -jnp.exp(p["a_log"])                                  # (di, st)
+    decay = ch(jnp.exp(dt[..., None] * a))                    # (B,S,di,st)
+    binp = ch((dt * cx.astype(F32))[..., None] * bmat[:, :, None, :])
+    if ssm_state is None:
+        ssm_state = jnp.zeros((b, di, st), F32)
+    hs, h_fin = _mamba_scan(decay, binp, ssm_state, chunk)
+    y = jnp.einsum("bsdk,bsk->bsd", hs, cmat)
+    y = y + cx.astype(F32) * p["d_skip"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return dense(p["out_proj"], y), (conv_state, h_fin)

@@ -1,0 +1,182 @@
+"""Roofline assembly: dry-run JSONs -> the three-term table (§Roofline).
+
+Terms (seconds, per chip — the dry-run artifacts are per-device SPMD
+modules, so parsed quantities are already per chip):
+
+  compute    = dot_flops / PEAK_FLOPS            (loop-aware HLO dots)
+  memory     = dot_bytes / HBM_BW                (dot operand+output traffic;
+               upper bound on HBM movement — fusion keeps some tiles in VMEM)
+  collective = collective_bytes / ICI_BW         (loop-aware, per-device)
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per step over the whole
+job, divided by chips for the per-chip "useful" flops; the ratio against
+compiled dot flops exposes remat/dispatch waste.
+
+Hardware constants (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+
+from repro.configs.base import SHAPES, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def active_params(cfg) -> tuple[float, float]:
+    """(total_params, active_params) excluding embeddings (6ND convention)."""
+    d = cfg.d_model
+    kind = cfg.block_kind
+
+    def attn_p():
+        if cfg.kv_lora_rank:
+            hd = cfg.qk_nope_dim + cfg.qk_rope_dim
+            return (d * cfg.n_heads * hd + d * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+                    + cfg.kv_lora_rank * cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim)
+                    + cfg.n_heads * cfg.v_head_dim * d)
+        return (d * cfg.n_heads * cfg.head_dim + 2 * d * cfg.n_kv_heads * cfg.head_dim
+                + cfg.n_heads * cfg.head_dim * d)
+
+    def mlp_p(dff):
+        return (3 if cfg.mlp_gated else 2) * d * dff
+
+    total = active = 0.0
+    if kind in ("gqa", "gemma", "musicgen"):
+        per = attn_p() + mlp_p(cfg.d_ff)
+        total = active = cfg.n_layers * per
+    elif kind == "gqa_moe":
+        ex = 3 * d * cfg.d_ff_expert
+        per_t = attn_p() + cfg.n_experts * ex
+        per_a = attn_p() + cfg.top_k * ex
+        total, active = cfg.n_layers * per_t, cfg.n_layers * per_a
+    elif kind == "mla_moe":
+        ex = 3 * d * cfg.d_ff_expert
+        shared = 3 * d * cfg.d_ff_expert * max(cfg.n_shared_experts, 1)
+        nd_ = cfg.first_dense_layers
+        nm = cfg.n_layers - nd_
+        total = nd_ * (attn_p() + mlp_p(cfg.d_ff_dense)) + \
+            nm * (attn_p() + cfg.n_experts * ex + shared)
+        active = nd_ * (attn_p() + mlp_p(cfg.d_ff_dense)) + \
+            nm * (attn_p() + cfg.top_k * ex + shared)
+    elif kind == "vlm":
+        per = attn_p() + mlp_p(cfg.d_ff)
+        n_cross = cfg.n_layers // cfg.cross_every
+        total = active = cfg.n_layers * per  # cross ~ self in param count
+    elif kind == "xlstm":
+        di = 2 * d
+        per_m = 2 * d * di + 3 * di * di + di * d + 2 * di
+        per_s = 4 * d * d + 4 * d * (d // cfg.n_heads) + 2 * d * int(d * 4 / 3)
+        total = active = (cfg.n_layers // 2) * (per_m + per_s)
+    elif kind == "hymba":
+        di = cfg.d_inner
+        mamba = 2 * d * di + di * (2 * cfg.ssm_state) + di * max(1, d // 16) * 2 + di * d
+        per = attn_p() + mamba + mlp_p(cfg.d_ff)
+        total = active = cfg.n_layers * per
+    return total, active
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """6*N_active*D for train (fwd+bwd); 2*N_active*D for inference steps."""
+    cfg = get_config(arch)
+    sp = SHAPES[shape]
+    _, act = active_params(cfg)
+    if sp.mode == "train":
+        tokens = sp.global_batch * sp.seq_len
+        return 6.0 * act * tokens
+    if sp.mode == "prefill":
+        tokens = sp.global_batch * sp.seq_len
+        return 2.0 * act * tokens
+    tokens = sp.global_batch  # one new token per sequence
+    return 2.0 * act * tokens
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    status: str
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = "-"
+    model_flops: float = 0.0
+    hlo_flops: float = 0.0
+    useful_ratio: float = 0.0
+    roofline_fraction: float = 0.0
+    compile_s: float = 0.0
+
+    def bound_time(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def row_from_record(rec: dict) -> RooflineRow:
+    row = RooflineRow(rec["arch"], rec["shape"], rec["mesh"],
+                      str(rec["status"]))
+    if rec["status"] != "ok":
+        return row
+    chips = CHIPS[rec["mesh"]]
+    row.compute_s = rec["flops_per_device"] / PEAK_FLOPS
+    row.memory_s = rec["dot_bytes_per_device"] / HBM_BW
+    row.collective_s = rec["collectives"]["total_bytes"] / ICI_BW
+    terms = {"compute": row.compute_s, "memory": row.memory_s,
+             "collective": row.collective_s}
+    row.dominant = max(terms, key=terms.get)
+    row.model_flops = model_flops(rec["arch"], rec["shape"])
+    row.hlo_flops = rec["flops_per_device"] * chips
+    row.useful_ratio = row.model_flops / row.hlo_flops if row.hlo_flops else 0.0
+    # fraction of ideal: time at peak for MODEL flops / bound step time
+    ideal = row.model_flops / chips / PEAK_FLOPS
+    bt = row.bound_time()
+    row.roofline_fraction = ideal / bt if bt else 0.0
+    row.compile_s = rec.get("compile_s", 0.0)
+    return row
+
+
+def load_rows(dryrun_dir: str, mesh: str | None = "16x16") -> list[RooflineRow]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        if mesh is not None and rec.get("mesh") != mesh:
+            continue
+        rows.append(row_from_record(rec))
+    return rows
+
+
+def markdown_table(rows: list[RooflineRow]) -> str:
+    hdr = ("| arch | shape | status | compute (ms) | memory (ms) | "
+           "collective (ms) | dominant | useful (6ND/HLO) | roofline frac |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if r.status != "ok":
+            lines.append(f"| {r.arch} | {r.shape} | {r.status} | - | - | - | - | - | - |")
+            continue
+        lines.append(
+            f"| {r.arch} | {r.shape} | ok | {r.compute_s*1e3:.1f} | "
+            f"{r.memory_s*1e3:.1f} | {r.collective_s*1e3:.1f} | "
+            f"**{r.dominant}** | {r.useful_ratio:.2f} | "
+            f"{r.roofline_fraction:.1%} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = load_rows(args.dir, args.mesh)
+    print(markdown_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Distributed-optimization trick (DESIGN.md §6): before the data-parallel
+all-reduce, gradients are quantized to int8 with a per-leaf f32 scale;
+the quantization residual is fed back into the next step's gradient
+(error-feedback / EF-SGD), which keeps convergence unbiased in expectation.
+Cuts DP all-reduce bytes 4x (f32) / 2x (bf16).
+
+Used by the trainer when ``grad_compression=True``; the quantize/dequantize
+pair brackets the psum so XLA lowers an int8 all-reduce.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(g.astype(jnp.float32))) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: Any, residual: Any | None):
+    """Apply error feedback, quantize. Returns ((q_tree, scale_tree), new_residual)."""
+    if residual is not None:
+        grads = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+    qs = jax.tree.map(quantize, grads,
+                      is_leaf=lambda x: isinstance(x, jnp.ndarray))
+    q_tree = jax.tree.map(lambda t: t[0], qs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    s_tree = jax.tree.map(lambda t: t[1], qs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    deq = jax.tree.map(dequantize, q_tree, s_tree)
+    new_residual = jax.tree.map(lambda g, d: g.astype(jnp.float32) - d, grads, deq)
+    return (q_tree, s_tree), new_residual
+
+
+def decompress_tree(q_tree: Any, s_tree: Any) -> Any:
+    return jax.tree.map(dequantize, q_tree, s_tree)
+
+
+def init_residual(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,6 @@
+import jax
+
+# Full-precision twiddles and f64 oracle paths throughout the suite.
+# (The dry-run sets its own XLA_FLAGS in a separate process; tests always
+# see the default single host device.)
+jax.config.update("jax_enable_x64", True)

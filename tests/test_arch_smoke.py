@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests: REDUCED configs (same family/block
+structure, tiny widths) run one forward + loss + grad and a prefill/decode
+round on CPU, asserting output shapes and finiteness (no NaNs)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, list_configs, input_specs, SHAPES
+from repro.models.model import Model
+
+ARCHS = ["granite-moe-1b-a400m", "deepseek-v2-lite-16b", "gemma3-27b",
+         "starcoder2-7b", "qwen3-1.7b", "internlm2-20b",
+         "llama-3.2-vision-90b", "xlstm-350m", "hymba-1.5b",
+         "musicgen-medium"]
+
+B, S = 2, 16
+
+
+def _batch(cfg, rng):
+    tok_shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks else (B, S)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, tok_shape), jnp.int32)}
+    if cfg.block_kind == "vlm":
+        batch["image_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_image_tokens, cfg.d_model)),
+            jnp.float32).astype(cfg.dtype)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_registry_full_config(arch):
+    cfg = get_config(arch)
+    assert cfg.n_layers > 0 and cfg.d_model > 0 and cfg.vocab_size > 0
+    # every shape has well-defined input specs
+    for shape in SHAPES:
+        specs = input_specs(cfg, shape)
+        assert "tokens" in specs
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_grad(arch, rng):
+    cfg = get_config(arch).reduced()
+    model = Model(cfg, mesh=None, remat=False)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = _batch(cfg, rng)
+
+    logits, aux, _ = jax.jit(lambda p, b: model.forward(
+        p, b["tokens"], image_embeds=b.get("image_embeds")))(params, batch)
+    exp = (B, S + 0, cfg.n_codebooks, cfg.vocab_size) if cfg.n_codebooks \
+        else (B, S, cfg.vocab_size)
+    assert logits.shape == exp, (logits.shape, exp)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), "NaN in logits"
+
+    (loss, metrics), grads = jax.jit(jax.value_and_grad(
+        model.loss_fn, has_aux=True))(params, batch)
+    assert np.isfinite(float(loss)), "NaN loss"
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0, "bad grads"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode(arch, rng):
+    cfg = get_config(arch).reduced()
+    model = Model(cfg, mesh=None, remat=False)
+    params = model.init_params(jax.random.PRNGKey(1))
+    batch = _batch(cfg, rng)
+    img = batch.get("image_embeds")
+    max_len = S + 4
+
+    cache = model.init_cache(B, max_len)
+    last, cache = jax.jit(lambda p, t, c: model.prefill(
+        p, t, c, image_embeds=img))(params, batch["tokens"][:, :S], cache)
+    assert np.isfinite(np.asarray(last, np.float32)).all()
+
+    tok_next = batch["tokens"][:, :1]
+    step = jax.jit(lambda p, t, c, pos: model.decode_step(
+        p, t, c, pos, image_embeds=img))
+    logits, cache = step(params, tok_next, cache, jnp.asarray(S, jnp.int32))
+    vshape = (B, 1, cfg.n_codebooks, cfg.vocab_size) if cfg.n_codebooks \
+        else (B, 1, cfg.vocab_size)
+    assert logits.shape == vshape
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    logits2, _ = step(params, tok_next, cache, jnp.asarray(S + 1, jnp.int32))
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+def test_decode_consistency_gqa(rng):
+    """decode_step(t) after prefill(0..t-1) == column t of the full forward."""
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = Model(cfg, mesh=None, remat=False)
+    params = model.init_params(jax.random.PRNGKey(2))
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 9)), jnp.int32)
+    full, _, _ = model.forward(params, tokens)
+    cache = model.init_cache(1, 16)
+    _, cache = model.prefill(params, tokens[:, :8], cache)
+    dec, _ = model.decode_step(params, tokens[:, 8:9], cache,
+                               jnp.asarray(8, jnp.int32))
+    a = np.asarray(dec[0, 0], np.float32)
+    b = np.asarray(full[0, 8], np.float32)
+    # bf16 params/cache + different (blocked vs dense) softmax accumulation
+    # order: compare up to bf16-scale noise + demand near-perfect correlation
+    assert np.abs(a - b).max() < 0.5, np.abs(a - b).max()
+    assert np.corrcoef(a, b)[0, 1] > 0.999
+
+
+def test_decode_consistency_xlstm(rng):
+    cfg = get_config("xlstm-350m").reduced()
+    model = Model(cfg, mesh=None, remat=False)
+    params = model.init_params(jax.random.PRNGKey(3))
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 9)), jnp.int32)
+    full, _, _ = model.forward(params, tokens)
+    cache = model.init_cache(1, 16)
+    _, cache = model.prefill(params, tokens[:, :8], cache)
+    dec, _ = model.decode_step(params, tokens[:, 8:9], cache,
+                               jnp.asarray(8, jnp.int32))
+    a = np.asarray(dec[0, 0], np.float32)
+    b = np.asarray(full[0, 8], np.float32)
+    assert np.abs(a - b).max() < 0.5, np.abs(a - b).max()
+    assert np.corrcoef(a, b)[0, 1] > 0.999
+
+
+def test_all_archs_registered():
+    assert set(ARCHS) <= set(list_configs())

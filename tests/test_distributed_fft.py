@@ -1,0 +1,22 @@
+"""Distributed FFT tests — run in a subprocess so the fake-device XLA_FLAGS
+never leak into this test process (smoke tests must see 1 device)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_distributed_fft_on_8_devices():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "helpers", "dist_fft_check.py")],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "ALL DISTRIBUTED CHECKS PASSED" in proc.stdout

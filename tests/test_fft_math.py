@@ -1,0 +1,148 @@
+"""Unit + property tests for the FFT math substrate (repro.fft.*)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.fft import stockham, fourstep, bluestein, rfft as rfft_mod, nd
+
+jax.config.update("jax_enable_x64", True)
+
+RNG = np.random.default_rng(42)
+
+
+def rand_complex(shape, dtype=np.complex64):
+    return (RNG.standard_normal(shape) + 1j * RNG.standard_normal(shape)).astype(dtype)
+
+
+def rand_real(shape, dtype=np.float32):
+    return RNG.standard_normal(shape).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# complex engines vs numpy
+# --------------------------------------------------------------------------
+ENGINES = {"stockham": stockham.fft, "fourstep": fourstep.fft, "bluestein": bluestein.fft}
+
+
+@pytest.mark.parametrize("engine", ["stockham", "fourstep", "bluestein"])
+@pytest.mark.parametrize("n", [2, 4, 8, 64, 128, 256, 1024, 4096])
+@pytest.mark.parametrize("batch", [(), (3,), (2, 5)])
+def test_cfft_pow2_matches_numpy(engine, n, batch):
+    x = rand_complex((*batch, n))
+    got = np.asarray(ENGINES[engine](jnp.asarray(x)))
+    want = np.fft.fft(x, axis=-1)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4 * np.sqrt(n))
+
+
+@pytest.mark.parametrize("engine", ["stockham", "fourstep", "bluestein"])
+@pytest.mark.parametrize("n", [8, 256, 2048])
+def test_cfft_roundtrip(engine, n):
+    x = rand_complex((4, n))
+    f = ENGINES[engine]
+    got = np.asarray(f(f(jnp.asarray(x)), inverse=True))
+    np.testing.assert_allclose(got, x, rtol=1e-4, atol=1e-4 * np.sqrt(n))
+
+
+@pytest.mark.parametrize("n", [3, 5, 6, 12, 96, 120, 360, 1000])
+def test_fourstep_smooth_sizes(n):
+    x = rand_complex((2, n))
+    got = np.asarray(fourstep.fft(jnp.asarray(x)))
+    np.testing.assert_allclose(got, np.fft.fft(x, axis=-1), rtol=2e-4, atol=2e-4 * np.sqrt(n))
+
+
+@pytest.mark.parametrize("n", [3, 7, 17, 19, 97, 361, 1009])  # incl. 19^2 (paper oddshape)
+def test_bluestein_arbitrary_sizes(n):
+    x = rand_complex((2, n))
+    got = np.asarray(bluestein.fft(jnp.asarray(x)))
+    np.testing.assert_allclose(got, np.fft.fft(x, axis=-1), rtol=3e-4, atol=3e-4 * np.sqrt(n))
+
+
+def test_float64_precision():
+    x = rand_complex((2, 512), dtype=np.complex128)
+    got = np.asarray(stockham.fft(jnp.asarray(x)))
+    np.testing.assert_allclose(got, np.fft.fft(x, axis=-1), rtol=1e-12, atol=1e-10)
+
+
+# --------------------------------------------------------------------------
+# real transforms
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [2, 8, 64, 750, 1024])
+def test_rfft_matches_numpy(n):
+    x = rand_real((3, n))
+    cfft = fourstep.fft if n % 2 == 0 or n == 750 else bluestein.fft
+    got = np.asarray(rfft_mod.rfft(jnp.asarray(x), cfft))
+    want = np.fft.rfft(x, axis=-1)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4 * np.sqrt(n))
+
+
+@pytest.mark.parametrize("n", [8, 64, 1024, 27])
+def test_irfft_roundtrip(n):
+    x = rand_real((3, n))
+    cfft = fourstep.fft if n % 2 == 0 else bluestein.fft
+    spec = rfft_mod.rfft(jnp.asarray(x), cfft)
+    back = np.asarray(rfft_mod.irfft(spec, n, cfft))
+    np.testing.assert_allclose(back, x, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# N-d transforms (the paper's 3D R2C headline case)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(8, 8), (4, 8, 16), (16, 16, 16)])
+def test_fftn_matches_numpy(shape):
+    x = rand_complex(shape)
+    got = np.asarray(nd.fftn(jnp.asarray(x), stockham.fft))
+    np.testing.assert_allclose(got, np.fft.fftn(x), rtol=1e-3, atol=1e-3 * np.sqrt(np.prod(shape)))
+
+
+@pytest.mark.parametrize("shape", [(8, 16), (16, 16, 16), (8, 12, 20)])
+def test_rfftn_matches_numpy(shape):
+    x = rand_real(shape)
+    got = np.asarray(nd.rfftn(jnp.asarray(x), fourstep.fft))
+    np.testing.assert_allclose(got, np.fft.rfftn(x), rtol=1e-3, atol=1e-3 * np.sqrt(np.prod(shape)))
+
+
+@pytest.mark.parametrize("shape", [(16, 16, 16), (8, 12, 20)])
+def test_irfftn_roundtrip(shape):
+    x = rand_real(shape)
+    spec = nd.rfftn(jnp.asarray(x), fourstep.fft)
+    back = np.asarray(nd.irfftn(spec, shape, fourstep.fft))
+    np.testing.assert_allclose(back, x, rtol=1e-3, atol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# property tests: DFT invariants
+# --------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(logn=st.integers(1, 9), seed=st.integers(0, 2**31 - 1))
+def test_property_linearity(logn, seed):
+    n = 2 ** logn
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((n,)) + 1j * rng.standard_normal((n,))).astype(np.complex64)
+    y = (rng.standard_normal((n,)) + 1j * rng.standard_normal((n,))).astype(np.complex64)
+    a, b = 0.7, -1.3
+    lhs = np.asarray(stockham.fft(jnp.asarray(a * x + b * y)))
+    rhs = a * np.asarray(stockham.fft(jnp.asarray(x))) + b * np.asarray(stockham.fft(jnp.asarray(y)))
+    np.testing.assert_allclose(lhs, rhs, rtol=2e-3, atol=2e-3 * np.sqrt(n))
+
+
+@settings(max_examples=25, deadline=None)
+@given(logn=st.integers(1, 9), seed=st.integers(0, 2**31 - 1))
+def test_property_parseval(logn, seed):
+    n = 2 ** logn
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((n,)) + 1j * rng.standard_normal((n,))).astype(np.complex64)
+    X = np.asarray(fourstep.fft(jnp.asarray(x)))
+    np.testing.assert_allclose(np.sum(np.abs(X) ** 2) / n, np.sum(np.abs(x) ** 2),
+                               rtol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 257), seed=st.integers(0, 2**31 - 1))
+def test_property_bluestein_roundtrip_any_n(n, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((n,)) + 1j * rng.standard_normal((n,))).astype(np.complex64)
+    back = np.asarray(bluestein.fft(bluestein.fft(jnp.asarray(x)), inverse=True))
+    np.testing.assert_allclose(back, x, rtol=2e-3, atol=2e-3)

@@ -1,0 +1,213 @@
+"""Training substrate: optimizer, data determinism, checkpoint/restart,
+preemption, straggler watchdog, gradient compression."""
+
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.models.model import Model
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state, schedule
+from repro.train.trainer import TrainConfig, Trainer, build_train_step
+from repro.train import compression
+
+
+# --------------------------------------------------------------------------
+# optimizer
+# --------------------------------------------------------------------------
+def test_adamw_reduces_quadratic():
+    cfg = OptConfig(lr=0.1, warmup_steps=0, total_steps=200, weight_decay=0.0,
+                    clip_norm=100.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = init_opt_state(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(100):
+        grads = jax.grad(loss)(params)
+        params, state, m = adamw_update(cfg, params, grads, state)
+    assert float(loss(params)) < 1e-2
+
+
+def test_schedule_warmup_and_decay():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    assert float(schedule(cfg, jnp.asarray(0))) < 0.2
+    assert abs(float(schedule(cfg, jnp.asarray(10))) - 1.0) < 0.1
+    assert float(schedule(cfg, jnp.asarray(100))) <= 0.11
+
+
+def test_grad_clipping():
+    cfg = OptConfig(lr=1e-3, clip_norm=1.0, warmup_steps=0)
+    params = {"w": jnp.zeros(4)}
+    state = init_opt_state(params)
+    huge = {"w": jnp.full(4, 1e6)}
+    new_params, _, m = adamw_update(cfg, params, huge, state)
+    assert float(m["grad_norm"]) > 1e5
+    assert np.isfinite(np.asarray(new_params["w"])).all()
+
+
+# --------------------------------------------------------------------------
+# data pipeline
+# --------------------------------------------------------------------------
+def test_data_deterministic_and_step_indexed():
+    cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=4, seed=7)
+    a = SyntheticTokens(cfg)
+    b = SyntheticTokens(cfg)
+    np.testing.assert_array_equal(a.batch(5)["tokens"], b.batch(5)["tokens"])
+    assert not np.array_equal(a.batch(5)["tokens"], a.batch(6)["tokens"])
+    assert int(a.batch(0)["tokens"].max()) < 1000
+
+
+def test_data_multicodebook():
+    cfg = DataConfig(vocab_size=64, seq_len=16, global_batch=2, n_codebooks=4)
+    t = SyntheticTokens(cfg).batch(0)["tokens"]
+    assert t.shape == (2, 16, 4)
+
+
+# --------------------------------------------------------------------------
+# checkpointing
+# --------------------------------------------------------------------------
+def test_checkpoint_roundtrip_and_rotation(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    params = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+              "nested": {"b": jnp.ones((4,), jnp.bfloat16)}}
+    opt = init_opt_state(params)
+    for step in (10, 20, 30):
+        mgr.save(step, params, opt, extra={"data_step": step})
+    assert mgr.all_steps() == [20, 30]  # rotated
+    template = jax.tree.map(jnp.zeros_like, params)
+    otemp = init_opt_state(params)
+    p2, o2, manifest = mgr.restore(template, otemp)
+    assert manifest["step"] == 30 and manifest["data_step"] == 30
+    np.testing.assert_array_equal(p2["a"], params["a"])
+    assert o2["step"].dtype == np.int32
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, {"w": jnp.ones(3)})
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save_async(5, {"w": jnp.ones(3)})
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+# --------------------------------------------------------------------------
+# compression
+# --------------------------------------------------------------------------
+def test_compression_error_feedback_converges():
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(0, 1, 64), jnp.float32)}
+    residual = compression.init_residual(g)
+    total_true = np.zeros(64)
+    total_comp = np.zeros(64)
+    for _ in range(50):
+        (q, s), residual = compression.compress_tree(g, residual)
+        deq = compression.decompress_tree(q, s)
+        total_true += np.asarray(g["w"])
+        total_comp += np.asarray(deq["w"])
+    # error feedback keeps the cumulative sum unbiased
+    np.testing.assert_allclose(total_comp, total_true, rtol=0, atol=0.2)
+    assert q["w"].dtype == jnp.int8
+
+
+# --------------------------------------------------------------------------
+# trainer end-to-end (tiny model)
+# --------------------------------------------------------------------------
+def _tiny_setup(tmp_path, steps=6, **tkw):
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2)
+    model = Model(cfg, remat=False)
+    data = SyntheticTokens(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                      global_batch=4))
+    tcfg = TrainConfig(steps=steps, checkpoint_every=3,
+                       checkpoint_dir=str(tmp_path), log_every=100,
+                       opt=OptConfig(lr=1e-3, warmup_steps=2, total_steps=steps),
+                       **tkw)
+    return model, data, tcfg
+
+
+def test_trainer_loss_decreases(tmp_path):
+    model, data, tcfg = _tiny_setup(tmp_path, steps=30)
+    tcfg.checkpoint_every = 1000
+    out = Trainer(model, data, tcfg).run(verbose=False)
+    # compare against step-0 loss
+    params0 = model.init_params(jax.random.PRNGKey(0))
+    l0 = float(model.loss_fn(params0, data.batch(0))[0])
+    assert out["step"] == 30
+    assert out["loss"] < l0, (out["loss"], l0)
+
+
+def test_trainer_checkpoint_restart_resumes(tmp_path):
+    model, data, tcfg = _tiny_setup(tmp_path, steps=3)
+    out1 = Trainer(model, data, tcfg).run(verbose=False)
+    assert out1["step"] == 3
+    # second run continues to step 6 from the step-3 checkpoint
+    tcfg.steps = 6
+    out2 = Trainer(model, data, tcfg).run(verbose=False)
+    assert out2["step"] == 6
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.latest_step() == 6
+
+
+def test_trainer_preemption_checkpoints_and_resumes(tmp_path):
+    model, data, tcfg = _tiny_setup(tmp_path, steps=50)
+
+    class PreemptingData:
+        def __init__(self, inner, trainer_box, at):
+            self.inner, self.box, self.at = inner, trainer_box, at
+        def batch(self, step):
+            if step >= self.at:
+                self.box[0]._stop = True  # simulate SIGTERM mid-run
+            return self.inner.batch(step)
+
+    box = [None]
+    pdata = PreemptingData(data, box, at=4)
+    tr = Trainer(model, pdata, tcfg)
+    box[0] = tr
+    out = tr.run(verbose=False)
+    assert out["preempted"] and out["step"] == 5
+    assert CheckpointManager(str(tmp_path)).latest_step() == 5
+    # clean restart picks up exactly where preemption checkpointed
+    tcfg.steps = 7
+    out2 = Trainer(model, data, tcfg).run(verbose=False)
+    assert out2["step"] == 7 and not out2["preempted"]
+
+
+def test_trainer_grad_compression_runs(tmp_path):
+    model, data, tcfg = _tiny_setup(tmp_path, steps=4, grad_compression=True)
+    out = Trainer(model, data, tcfg).run(verbose=False)
+    assert out["step"] == 4 and np.isfinite(out["loss"])
+
+
+def test_trainer_microbatch_equivalence(tmp_path):
+    """2 microbatches == 1 full batch (same grads up to fp noise)."""
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=1)
+    model = Model(cfg, remat=False)
+    data = SyntheticTokens(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                      global_batch=4))
+    params = model.init_params(jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    batch = data.batch(0)
+    s1 = build_train_step(model, OptConfig(lr=1e-3), microbatches=1)
+    s2 = build_train_step(model, OptConfig(lr=1e-3), microbatches=2)
+    p1, _, m1 = jax.jit(s1)(params, opt, batch)
+    p2, _, m2 = jax.jit(s2)(params, init_opt_state(params), batch)
+    d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert d < 5e-2, d  # bf16 params; loss means differ by microbatch averaging
+
+
+def test_straggler_watchdog():
+    from repro.train.trainer import Trainer as T
+    t = T.__new__(T)
+    t.cfg = TrainConfig(straggler_factor=2.0)
+    t._step_times, t.stragglers = [], []
+    for step, dt in enumerate([1, 1, 1, 1, 1, 5, 1]):
+        t._watchdog(step, dt)
+    assert t.stragglers == [5]

@@ -1,0 +1,69 @@
+"""Fill EXPERIMENTS.md markers from dry-run artifacts.
+
+  PYTHONPATH=src python tools/update_experiments.py
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.roofline.analysis import load_rows, markdown_table, row_from_record  # noqa: E402
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+TUNED = os.path.join(ROOT, "experiments", "dryrun")
+BASE = os.path.join(ROOT, "experiments", "dryrun_baseline")
+
+PERF_CELLS = [("starcoder2-7b", "prefill_32k"),
+              ("gemma3-27b", "train_4k"),
+              ("deepseek-v2-lite-16b", "train_4k"),
+              ("granite-moe-1b-a400m", "train_4k"),
+              ("internlm2-20b", "decode_32k"),
+              ("llama-3.2-vision-90b", "train_4k")]
+
+
+def _load(d, arch, shape):
+    p = os.path.join(d, f"{arch}_{shape}_16-16.json")
+    return json.load(open(p)) if os.path.exists(p) else None
+
+
+def perf_table() -> str:
+    lines = ["| cell | metric | baseline | tuned | change |",
+             "|---|---|---|---|---|"]
+    for arch, shape in PERF_CELLS:
+        b = _load(BASE, arch, shape)
+        t = _load(TUNED, arch, shape)
+        if not b or not t or b["status"] != "ok" or t["status"] != "ok":
+            continue
+        rb, rt = row_from_record(b), row_from_record(t)
+        bt = b["memory"]["temp_size_in_bytes"] / 2**30
+        tt = t["memory"]["temp_size_in_bytes"] / 2**30
+        bc = b["collectives"]["total_bytes"] / 2**30
+        tc = t["collectives"]["total_bytes"] / 2**30
+        fits_b = "FITS" if bt + b["memory"]["argument_size_in_bytes"] / 2**30 < 14 else "OOM"
+        fits_t = "FITS" if tt + t["memory"]["argument_size_in_bytes"] / 2**30 < 14 else "OOM"
+        cell = f"{arch} × {shape}"
+        lines.append(f"| {cell} | temp GiB/chip | {bt:.1f} ({fits_b}) | {tt:.1f} ({fits_t}) | {tt/bt:.2f}x |")
+        lines.append(f"| | collective GiB/chip | {bc:.1f} | {tc:.1f} | {tc/bc:.2f}x |")
+        lines.append(f"| | bound step time (s) | {rb.bound_time():.2f} | {rt.bound_time():.2f} | {rt.bound_time()/rb.bound_time():.2f}x |")
+        lines.append(f"| | roofline frac | {rb.roofline_fraction:.1%} | {rt.roofline_fraction:.1%} | — |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    rows = load_rows(TUNED, "16x16")
+    table = markdown_table(rows)
+    with open(os.path.join(ROOT, "experiments", "roofline_table.md"), "w") as f:
+        f.write(table + "\n")
+    text = open(EXP).read()
+    text = text.replace("<!-- ROOFLINE_TABLE -->", table)
+    text = text.replace("<!-- PERF_TABLE -->", perf_table())
+    open(EXP, "w").write(text)
+    ok = sum(1 for r in rows if r.status == "ok")
+    print(f"updated EXPERIMENTS.md: {len(rows)} rows ({ok} ok)")
+
+
+if __name__ == "__main__":
+    main()
