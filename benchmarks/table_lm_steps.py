@@ -1,40 +1,190 @@
 """The framework integration table: LM train/serve steps measured through
-the SAME gearshifft runner that measures FFT clients (DESIGN.md §3) —
-reduced configs on CPU; the full configs are exercised by the dry-run."""
+the SAME gearshifft Runner/OpSchedule that drives the FFT clients
+(DESIGN.md §3) — reduced configs on CPU; the full configs are exercised by
+the dry-run.
+
+Each (arch, mode) pair is a registered client whose Table-1 ops map onto the
+LM workload: allocate = params/optimizer/cache init, upload = host batch to
+device, init_forward = AOT compile of the step (prefill for decode),
+execute_forward = one train/decode step, download = fetch the loss/logits.
+The plan/executable cache memoizes the compiled step so warm repetitions
+measure pure step dispatch, exactly like warm FFT repetitions.
+"""
 
 from __future__ import annotations
 
+import numpy as np
 import jax
 
 from repro.configs.base import get_config
+from repro.core.benchmark import Benchmark, BenchmarkConfig
+from repro.core.client import Context, Problem
+from repro.core.plan import PlanCache, cached_build, executable_bytes
+from repro.core.registry import register_client
+from repro.core.schedule import OpSchedule, OpStep
+from repro.core.tree import BenchNode
 from repro.data.pipeline import DataConfig, SyntheticTokens
 from repro.models.model import Model
 from repro.train.optimizer import OptConfig, init_opt_state
 from repro.train.trainer import build_train_step
-from .common import emit, time_fn
+from .common import emit
 
 ARCHS = ["qwen3-1.7b", "granite-moe-1b-a400m", "xlstm-350m", "hymba-1.5b"]
+SEQ_LEN = 64
+BATCH = 4
+
+#: LM steps have no inverse transform — their schedule says so, and the
+#: shared Runner drives it with the same per-op timers.
+LM_SCHEDULE = OpSchedule("lm_step", (
+    OpStep("allocate", "allocate", bytes_method="get_alloc_size"),
+    OpStep("upload", "upload", needs_input=True,
+           bytes_method="get_transfer_size"),
+    OpStep("init_forward", "init_forward", bytes_method="get_plan_size"),
+    OpStep("execute_forward", "execute_forward"),
+    OpStep("download", "download", captures_output=True),
+    OpStep("destroy", "destroy"),
+))
+
+
+class LMStepClient:
+    """Generic (non-FFT) client: one LM step behind the Table-1 protocol."""
+
+    title = "LMStep"
+    arch = "qwen3-1.7b"
+    mode = "train"          # 'train' | 'decode'
+    schedule = LM_SCHEDULE
+
+    def __init__(self, problem: Problem, context: Context, rigor=None,
+                 wisdom=None, plan_cache: PlanCache | None = None):
+        self.problem = problem
+        self.context = context
+        self.plan_cache = plan_cache
+        self.cache_events: dict[str, str] = {}
+        self.cfg = get_config(self.arch).reduced()
+        self.model = Model(self.cfg, remat=False)
+        self.params = None
+        self.opt = None
+        self.cache = None
+        self.batch = None
+        self._compiled = None
+        self._out = None
+        self._plan_bytes = 0
+        # sizes are snapshotted when the state exists — the Runner queries
+        # byte accessors after destroy() has dropped the live references
+        self._alloc_bytes = 0
+        self._transfer_bytes = 0
+
+    # --- host input / validation hooks ------------------------------------
+    @classmethod
+    def make_host_input(cls, problem: Problem, seed: int) -> dict:
+        cfg = get_config(cls.arch).reduced()
+        data = SyntheticTokens(DataConfig(vocab_size=cfg.vocab_size,
+                                          seq_len=problem.extents[0],
+                                          global_batch=problem.batch,
+                                          n_codebooks=cfg.n_codebooks))
+        return data.batch(seed % 1000)
+
+    @classmethod
+    def check(cls, problem, host_in, out, error_bound):
+        ok = bool(np.all(np.isfinite(np.asarray(out))))
+        return ok, "" if ok else "non-finite step output"
+
+    # --- memory -----------------------------------------------------------
+    def allocate(self) -> None:
+        self.params = self.model.init_params(jax.random.PRNGKey(0))
+        if self.mode == "train":
+            self.opt = init_opt_state(self.params)
+        else:
+            self.cache = self.model.init_cache(self.problem.batch,
+                                               self.problem.extents[0] + 32)
+        jax.block_until_ready(self.params)
+        self._alloc_bytes = int(sum(
+            a.size * a.dtype.itemsize
+            for a in jax.tree_util.tree_leaves(self.params)))
+
+    def destroy(self) -> None:
+        self.params = self.opt = self.cache = self.batch = None
+        self._compiled = self._out = None
+
+    def get_alloc_size(self) -> int:
+        return self._alloc_bytes
+
+    def get_transfer_size(self) -> int:
+        return self._transfer_bytes
+
+    def get_plan_size(self) -> int:
+        return self._plan_bytes
+
+    # --- transfer ---------------------------------------------------------
+    def upload(self, host_batch: dict) -> None:
+        self._transfer_bytes = int(sum(
+            np.asarray(a).nbytes
+            for a in jax.tree_util.tree_leaves(host_batch)))
+        self.batch = jax.device_put(host_batch)
+        jax.block_until_ready(self.batch)
+
+    def download(self) -> np.ndarray:
+        return np.asarray(self._out)
+
+    # --- planning ---------------------------------------------------------
+    def _aot(self, tag: str, fn, *args):
+        """AOT lower+compile, memoized per (device, arch, mode) when a plan
+        cache is attached — warm repetitions skip the recompile."""
+        key = PlanCache.executable_key(
+            getattr(self.context, "device_kind", "?"), self.problem,
+            f"lm_{self.mode}[{self.arch}]", tag)
+        return cached_build(self.plan_cache, self.cache_events,
+                            "init_forward", key,
+                            lambda: jax.jit(fn).lower(*args).compile())
+
+    def init_forward(self) -> None:
+        if self.mode == "train":
+            step = build_train_step(self.model, OptConfig())
+            self._compiled = self._aot("forward", step, self.params,
+                                       self.opt, self.batch)
+            self._plan_bytes = executable_bytes(self._compiled)
+        else:
+            # serve path setup: prefill the KV cache, then AOT the decode step
+            _, self.cache = jax.jit(self.model.prefill)(
+                self.params, self.batch["tokens"], self.cache)
+            tok = self.batch["tokens"][:, :1]
+            pos = jax.numpy.asarray(self.problem.extents[0])
+            dec = lambda p, t, c, q: self.model.decode_step(p, t, c, q)[0]
+            self._compiled = self._aot("forward", dec, self.params, tok,
+                                       self.cache, pos)
+            self._plan_bytes = executable_bytes(self._compiled)
+
+    # --- execution --------------------------------------------------------
+    def execute_forward(self) -> None:
+        if self.mode == "train":
+            _, _, metrics = self._compiled(self.params, self.opt, self.batch)
+            self._out = metrics["loss"]
+        else:
+            tok = self.batch["tokens"][:, :1]
+            pos = jax.numpy.asarray(self.problem.extents[0])
+            self._out = self._compiled(self.params, tok, self.cache, pos)
+        jax.block_until_ready(self._out)
+
+
+def _registered(arch: str, mode: str) -> type:
+    name = f"LM{'Train' if mode == 'train' else 'Decode'}-{arch}"
+    cls = type(name.replace("-", "_").replace(".", "_"), (LMStepClient,),
+               {"title": name, "arch": arch, "mode": mode})
+    return register_client()(cls)
+
+
+CLIENTS = {(a, m): _registered(a, m) for a in ARCHS for m in ("train", "decode")}
 
 
 def run(reps: int = 3) -> None:
-    for arch in ARCHS:
-        cfg = get_config(arch).reduced()
-        model = Model(cfg, remat=False)
-        params = model.init_params(jax.random.PRNGKey(0))
-        data = SyntheticTokens(DataConfig(vocab_size=cfg.vocab_size,
-                                          seq_len=64, global_batch=4,
-                                          n_codebooks=cfg.n_codebooks))
-        batch = data.batch(0)
-        step = jax.jit(build_train_step(model, OptConfig()))
-        opt = init_opt_state(params)
-        us = time_fn(lambda p, o, b: step(p, o, b)[2]["loss"],
-                     params, opt, batch, reps=reps)
-        emit(f"lm/train_step/{arch}", us, "reduced b4s64")
-
-        cache = model.init_cache(4, 96)
-        _, cache = jax.jit(model.prefill)(params, batch["tokens"], cache)
-        dec = jax.jit(model.decode_step)
-        tok = batch["tokens"][:, :1]
-        us = time_fn(lambda p, t, c: dec(p, t, c, jax.numpy.asarray(64))[0],
-                     params, tok, cache, reps=reps)
-        emit(f"lm/decode_step/{arch}", us, "reduced b4")
+    nodes = [BenchNode(CLIENTS[(arch, mode)],
+                       Problem((SEQ_LEN,), "Outplace_Real", "float", batch=BATCH))
+             for arch in ARCHS for mode in ("train", "decode")]
+    cfg = BenchmarkConfig(warmups=1, repetitions=reps, output="/dev/null")
+    bench = Benchmark(Context(), cfg, plan_cache=PlanCache())
+    writer = bench.run_nodes(nodes)
+    for (lib, ext, prec, kind, rigor, op, mean, sd, n) in \
+            writer.aggregate(op="execute_forward"):
+        mode, arch = ("train", lib[len("LMTrain-"):]) \
+            if lib.startswith("LMTrain-") else ("decode", lib[len("LMDecode-"):])
+        emit(f"lm/{mode}_step/{arch}", mean * 1e3, f"reduced b{BATCH}s{SEQ_LEN}")

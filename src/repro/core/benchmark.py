@@ -1,26 +1,30 @@
-"""The benchmark runner — gearshifft's measurement core (paper §2.2, Fig. 1).
+"""The benchmark suite driver — gearshifft's measurement core (paper §2.2,
+Fig. 1), layered over the generic Runner.
 
 Per selected tree node:  context create (timed once per suite) ->
-for each run in (warmups + repetitions):
-    allocate -> init_forward -> upload -> execute_forward
-    -> init_inverse -> execute_inverse -> download -> destroy
-each operation individually timed; 'total' spans allocate..destroy.
-After the last run the round-trip output is validated against the input:
-err = sample standard deviation of (input - roundtrip); err > eps marks the
-node failed and the suite CONTINUES with the next node (paper behavior).
+Runner drives the node's OpSchedule (default: the paper's Table-1 sequence
+allocate -> init_forward -> upload -> execute_forward -> init_inverse ->
+execute_inverse -> download -> destroy) for warmups + repetitions, each
+operation individually timed; 'total' spans the whole run.
+After the last run the output is validated: by default the round-trip is
+compared against the input (err = sample standard deviation of
+(input - roundtrip); err > eps marks the node failed), or by the client
+class's own ``check`` hook for non-FFT workloads.  A failed node never
+aborts the suite — it is recorded and the suite CONTINUES (paper behavior).
 """
 
 from __future__ import annotations
 
 import traceback
 from dataclasses import dataclass, field
-from typing import Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
 from .client import Context, Problem
-from .plan import PlanRigor
-from .results import ResultWriter, Row
+from .plan import PlanCache, PlanRigor
+from .results import ResultSink, ResultWriter, Row, columns_for
+from .schedule import FFT_SCHEDULE, Runner
 from .timer import Timer
 from .tree import BenchNode
 
@@ -29,8 +33,12 @@ DEFAULT_ERROR_BOUND = 1e-5
 DEFAULT_WARMUPS = 2
 DEFAULT_REPS = 10
 
-OPS = ("allocate", "init_forward", "upload", "execute_forward",
-       "init_inverse", "execute_inverse", "download", "destroy", "total")
+OPS = FFT_SCHEDULE.op_names   # ("allocate", ..., "destroy", "total")
+
+
+class NoRunsError(RuntimeError):
+    """Raised when a node produced no output to validate (repetitions=0 or
+    the schedule never captured a download)."""
 
 
 @dataclass
@@ -65,17 +73,27 @@ def roundtrip_error(x: np.ndarray, y: np.ndarray) -> float:
 
 @dataclass
 class Benchmark:
-    """Suite driver: configure(argv) + run(clients, extents...)."""
+    """Suite driver: configure(argv) + run(clients, extents...).
+
+    ``plan_cache`` (optional) memoizes compiled executables across runs and
+    adds a ``plan_cache`` hit/miss column to every row; with it left ``None``
+    the per-run recompile behavior and the original CSV schema are preserved
+    exactly.
+    """
 
     context: Context
     config: BenchmarkConfig = field(default_factory=BenchmarkConfig)
-    writer: ResultWriter = None
+    writer: ResultSink = None
+    plan_cache: Optional[PlanCache] = None
 
     def __post_init__(self):
         if self.writer is None:
-            self.writer = ResultWriter(self.config.output)
+            self.writer = ResultWriter(
+                self.config.output,
+                columns=columns_for(self.plan_cache is not None))
 
-    def run_nodes(self, nodes: Sequence[BenchNode], wisdom=None, verbose: bool = False) -> ResultWriter:
+    def run_nodes(self, nodes: Sequence[BenchNode], wisdom=None,
+                  verbose: bool = False) -> ResultSink:
         with Timer() as t_ctx:
             self.context.create()
         self.writer.add(Row("context", getattr(self.context, "device_kind", "?"),
@@ -95,56 +113,55 @@ class Benchmark:
                     extents="x".join(map(str, p.extents)), rank=p.rank,
                     extent_class=node.extent_class, precision=p.precision,
                     kind=p.kind, rigor=cfg.rigor.value)
-        host_in = make_input(p, cfg.seed)
-        last_out = None
+        schedule = getattr(node.client_cls, "schedule", None) or FFT_SCHEDULE
+        make_host = getattr(node.client_cls, "make_host_input", None)
+        host_in = (make_host(p, cfg.seed) if make_host is not None
+                   else make_input(p, cfg.seed))
+        runner = Runner(schedule, cfg.warmups, cfg.repetitions)
+
+        def emit(rec):
+            # a warmup record carries only its cold-compile ops (negative
+            # run index marks it as outside the counted repetitions)
+            ops = (tuple(op for op, ev in rec.cache.items() if ev == "miss")
+                   if rec.warmup else schedule.op_names)
+            for op in ops:
+                self.writer.add(Row(**base, run=rec.run, op=op,
+                                    time_ms=rec.times[op],
+                                    bytes=rec.nbytes.get(op, 0),
+                                    plan_cache=rec.cache.get(op, "")))
+
+        def make_client():
+            return node.client_cls(p, self.context, rigor=cfg.rigor,
+                                   wisdom=wisdom, plan_cache=self.plan_cache)
+
         try:
-            for run in range(-cfg.warmups, cfg.repetitions):
-                client = node.client_cls(p, self.context, rigor=cfg.rigor, wisdom=wisdom)
-                times: dict[str, float] = {}
-                t_total = Timer().start()
-                with Timer() as t:
-                    client.allocate()
-                times["allocate"] = t.time_ms
-                with Timer() as t:
-                    client.init_forward()
-                times["init_forward"] = t.time_ms
-                with Timer() as t:
-                    client.upload(host_in)
-                times["upload"] = t.time_ms
-                with Timer() as t:
-                    client.execute_forward()
-                times["execute_forward"] = t.time_ms
-                with Timer() as t:
-                    client.init_inverse()
-                times["init_inverse"] = t.time_ms
-                with Timer() as t:
-                    client.execute_inverse()
-                times["execute_inverse"] = t.time_ms
-                with Timer() as t:
-                    last_out = client.download()
-                times["download"] = t.time_ms
-                with Timer() as t:
-                    client.destroy()
-                times["destroy"] = t.time_ms
-                times["total"] = t_total.stop()
-                if run >= 0:  # warmup runs are not recorded
-                    nbytes = {"upload": client.get_transfer_size(),
-                              "download": client.get_transfer_size(),
-                              "allocate": client.get_alloc_size(),
-                              "init_forward": client.get_plan_size(),
-                              "init_inverse": client.get_plan_size()}
-                    for op in OPS:
-                        self.writer.add(Row(**base, run=run, op=op,
-                                            time_ms=times[op],
-                                            bytes=nbytes.get(op, 0)))
-            # validate AFTER the last run (paper: validated once at the end)
-            err = roundtrip_error(host_in, last_out.reshape(host_in.shape))
-            ok = err <= cfg.error_bound
+            _, last_out = runner.run(make_client, host_in, on_record=emit)
+            # validate AFTER the last run (paper: validated once at the end);
+            # warmup-only output is not a measured result — don't bless it
+            if cfg.repetitions <= 0 or last_out is None:
+                raise NoRunsError(
+                    "no runs executed (repetitions=0 or download never ran)")
+            check = getattr(node.client_cls, "check", None)
+            if check is not None:
+                ok, msg = check(p, host_in, last_out, cfg.error_bound)
+                detail = msg or "ok"
+            else:
+                err = roundtrip_error(host_in, last_out.reshape(host_in.shape))
+                ok = err <= cfg.error_bound
+                msg = "" if ok else f"roundtrip_err={err:.3e}"
+                detail = f"err={err:.2e}"
             self.writer.add(Row(**base, run=cfg.repetitions, op="validate",
                                 time_ms=0.0, bytes=0, success=bool(ok),
-                                error="" if ok else f"roundtrip_err={err:.3e}"))
+                                error="" if ok else msg))
             if verbose:
-                print(f"[{'ok' if ok else 'FAIL'}] {node.path} err={err:.2e}")
+                print(f"[{'ok' if ok else 'FAIL'}] {node.path} {detail}")
+        except NoRunsError as e:
+            # repetitions=0 / missing download: a clear report, not a
+            # misleading AttributeError from validating a None output
+            self.writer.add(Row(**base, run=0, op="validate", time_ms=0.0,
+                                bytes=0, success=False, error=str(e)))
+            if verbose:
+                print(f"[SKIP] {node.path}: {e}")
         except Exception as e:  # failed config: record, continue with next node
             self.writer.add(Row(**base, run=0, op="validate", time_ms=0.0,
                                 bytes=0, success=False,

@@ -1,0 +1,126 @@
+"""Distributed-FFT client: the mesh-parallel 1D four-step transform
+(repro.fft.distributed) driven through the SAME Table-1 timed path as the
+single-device libraries — the FFTW-MPI / cuFFTMp "binary" of the suite.
+
+The forward transform emits the FFTW_MPI_TRANSPOSED_OUT spectrum layout; the
+inverse consumes it directly (TRANSPOSED_IN), so the measured round trip is
+the production layout-aware path with two all_to_alls per direction and no
+reordering pass.  On a single-device host the mesh degenerates to P=1 and
+the collectives are identity — the same code path the pod runs.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..client import Context, FFTClient, Problem
+from ..plan import PlanCache, PlanRigor, cached_build, executable_bytes
+from ..registry import register_client
+from repro.fft import distributed as dist
+
+
+@register_client()
+class DistFFT1DClient(FFTClient):
+    """1D distributed four-step FFT over all visible devices.
+
+    Constraints (recorded as node failures, not suite aborts): rank-1
+    complex transforms, batch 1, and n must factor as n1*n2 with the device
+    count dividing n1.
+    """
+
+    title = "DistFFT1D"
+
+    def __init__(self, problem: Problem, context: Context,
+                 rigor: PlanRigor | None = None, wisdom=None,
+                 plan_cache: PlanCache | None = None):
+        super().__init__(problem, context)
+        if problem.rank != 1:
+            raise ValueError("DistFFT1D supports rank-1 transforms only")
+        if not problem.complex_input:
+            raise ValueError("DistFFT1D supports complex kinds only")
+        if problem.batch != 1:
+            raise ValueError("DistFFT1D supports batch=1 only")
+        self.plan_cache = plan_cache
+        self.cache_events: dict[str, str] = {}
+        self._n = problem.extents[0]
+        self._mesh = None
+        self._sharding = None
+        self._buf = None
+        self._spec = None
+        self._fwd_compiled = self._inv_compiled = None
+        self._plan_bytes = 0
+
+    # --- memory -----------------------------------------------------------
+    def allocate(self) -> None:
+        devices = jax.devices()
+        self._mesh = Mesh(np.array(devices), ("data",))
+        self._sharding = NamedSharding(self._mesh, P("data"))
+        x = jnp.zeros((self._n,), dtype=self.problem.input_dtype.name)
+        self._buf = jax.device_put(x, self._sharding)
+        self._buf.block_until_ready()
+
+    def destroy(self) -> None:
+        for b in (self._buf, self._spec):
+            if b is not None:
+                try:
+                    b.delete()
+                except Exception:
+                    pass
+        self._buf = self._spec = None
+        self._fwd_compiled = self._inv_compiled = None
+
+    def get_alloc_size(self) -> int:
+        return 2 * self.problem.signal_bytes   # signal + spectrum buffers
+
+    def get_plan_size(self) -> int:
+        return self._plan_bytes
+
+    # --- planning ---------------------------------------------------------
+    def _n_devices(self) -> int:
+        return len(jax.devices())
+
+    def _compile(self, direction: str, build):
+        key = PlanCache.executable_key(
+            getattr(self.context, "device_kind", "?"), self.problem,
+            f"dist_fourstep[p={self._n_devices()}]", direction)
+        return cached_build(self.plan_cache, self.cache_events,
+                            f"init_{direction}", key, build)
+
+    def init_forward(self) -> None:
+        def build():
+            fn, _ = dist.make_fft1d(self._mesh, "data", self._n)
+            return fn.lower(self._buf).compile()
+
+        self._fwd_compiled = self._compile("forward", build)
+        self._plan_bytes = executable_bytes(self._fwd_compiled)
+
+    def init_inverse(self) -> None:
+        def build():
+            fn, _ = dist.make_ifft1d(self._mesh, "data", self._n)
+            # the transposed spectrum has the signal's shape/dtype/sharding
+            return fn.lower(self._spec if self._spec is not None
+                            else self._buf).compile()
+
+        self._inv_compiled = self._compile("inverse", build)
+        self._plan_bytes += executable_bytes(self._inv_compiled)
+
+    # --- execution --------------------------------------------------------
+    def execute_forward(self) -> None:
+        self._spec = self._fwd_compiled(self._buf)
+        self._spec.block_until_ready()
+
+    def execute_inverse(self) -> None:
+        self._buf = self._inv_compiled(self._spec)
+        self._buf.block_until_ready()
+
+    # --- transfer ---------------------------------------------------------
+    def upload(self, host_data: np.ndarray) -> None:
+        flat = jnp.asarray(np.asarray(host_data).reshape(-1))
+        self._buf = jax.device_put(flat, self._sharding)
+        self._buf.block_until_ready()
+
+    def download(self) -> np.ndarray:
+        return np.asarray(self._buf)

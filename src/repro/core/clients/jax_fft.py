@@ -11,8 +11,11 @@ Backend map (DESIGN.md §2):
 
 A client owns device buffers + AOT-compiled executables for ONE Problem —
 the jit-specialization equivalent of gearshifft's compile-time template
-instantiation.  init_forward/init_inverse re-lower and re-compile on every
-run so planning cost stays an honestly measured quantity (paper Figs. 4/5).
+instantiation.  By default init_forward/init_inverse re-lower and re-compile
+on every run so planning cost stays an honestly measured quantity (paper
+Figs. 4/5); with a PlanCache attached, the first run pays the measured cold
+compile and warm repetitions reuse the cached executable, with hit/miss
+events surfaced per op for the result rows.
 """
 
 from __future__ import annotations
@@ -24,7 +27,9 @@ import jax
 import jax.numpy as jnp
 
 from ..client import Context, FFTClient, Problem
-from ..plan import Candidate, Plan, PlanRigor, make_plan
+from ..plan import (Candidate, Plan, PlanCache, PlanRigor, cached_build,
+                    executable_bytes, make_plan)
+from ..registry import register_client
 from repro.fft import bluestein, fourstep, nd, stockham
 
 
@@ -92,11 +97,14 @@ class JaxFFTClient(FFTClient):
     rigor = PlanRigor.ESTIMATE
 
     def __init__(self, problem: Problem, context: Context,
-                 rigor: PlanRigor | None = None, wisdom=None):
+                 rigor: PlanRigor | None = None, wisdom=None,
+                 plan_cache: PlanCache | None = None):
         super().__init__(problem, context)
         if rigor is not None:
             self.rigor = rigor
         self.wisdom = wisdom
+        self.plan_cache = plan_cache
+        self.cache_events: dict[str, str] = {}
         self.plan: Plan | None = None
         self._buf = None
         self._spec = None
@@ -142,49 +150,75 @@ class JaxFFTClient(FFTClient):
         return self._plan_bytes
 
     # --- planning ---------------------------------------------------------
-    def _select(self) -> Candidate | None:
-        from ..plan import Plan, candidates, measure_plan
+    def _make_plan(self) -> Plan | None:
+        from ..plan import candidates, measure_plan
         import time as _time
 
         build = lambda c: build_forward(self.problem, c)
         if self.backend_filter is None:
-            plan = make_plan(self.problem, self.rigor, build=build, wisdom=self.wisdom)
-            if plan is None:
-                return None
+            return make_plan(self.problem, self.rigor, build=build,
+                             wisdom=self.wisdom)
+        # library-pinned client: planner searches only this backend's knobs
+        t0 = _time.perf_counter()
+        cands = [c for c in candidates(self.problem,
+                                       patient=(self.rigor is PlanRigor.PATIENT))
+                 if c.backend == self.backend_filter] or [Candidate(self.backend_filter)]
+        if self.rigor in (PlanRigor.MEASURE, PlanRigor.PATIENT) and len(cands) > 1:
+            cand, timings = measure_plan(self.problem, build, cands)
         else:
-            # library-pinned client: planner searches only this backend's knobs
-            t0 = _time.perf_counter()
-            cands = [c for c in candidates(self.problem,
-                                           patient=(self.rigor is PlanRigor.PATIENT))
-                     if c.backend == self.backend_filter] or [Candidate(self.backend_filter)]
-            if self.rigor in (PlanRigor.MEASURE, PlanRigor.PATIENT) and len(cands) > 1:
-                cand, timings = measure_plan(self.problem, build, cands)
-            else:
-                cand, timings = cands[0], {}
-            plan = Plan(self.problem, cand, self.rigor,
-                        (_time.perf_counter() - t0) * 1e3, timings)
+            cand, timings = cands[0], {}
+        return Plan(self.problem, cand, self.rigor,
+                    (_time.perf_counter() - t0) * 1e3, timings)
+
+    def _select(self) -> Candidate | None:
+        if self.plan_cache is not None:
+            # memoized selection: MEASURE/PATIENT candidate sweeps (which
+            # compile every candidate) run at most once per problem
+            pkey = PlanCache.plan_key(self._device_kind(), self.problem,
+                                      self.rigor, scope=self.backend_filter or "*")
+            plan, _ = self.plan_cache.plan(pkey, self._make_plan)
+        else:
+            plan = self._make_plan()
+        if plan is None:
+            return None
         self.plan = plan
         return plan.candidate
+
+    def _device_kind(self) -> str:
+        return getattr(self.context, "device_kind", "?")
 
     def init_forward(self) -> None:
         cand = self._select()
         if cand is None:
             raise RuntimeError("NULL plan (wisdom miss)")  # fftw semantics
-        donate = (0,) if self.problem.inplace else ()
-        fn = jax.jit(_forward_fn(self.problem, cand), donate_argnums=donate)
-        lowered = fn.lower(jax.ShapeDtypeStruct(self._buf.shape, self._buf.dtype))
-        self._fwd_compiled = lowered.compile()
+
+        def build():
+            donate = (0,) if self.problem.inplace else ()
+            fn = jax.jit(_forward_fn(self.problem, cand), donate_argnums=donate)
+            lowered = fn.lower(jax.ShapeDtypeStruct(self._buf.shape, self._buf.dtype))
+            return lowered.compile()
+
+        self._fwd_compiled = cached_build(
+            self.plan_cache, self.cache_events, "init_forward",
+            PlanCache.executable_key(self._device_kind(), self.problem,
+                                     cand, "forward"), build)
         self._plan_bytes = _plan_bytes(self._fwd_compiled)
 
     def init_inverse(self) -> None:
         cand = self.plan.candidate
-        donate = (0,) if self.problem.inplace else ()
-        fn = jax.jit(_inverse_fn(self.problem, cand), donate_argnums=donate)
-        spec_shape = jax.eval_shape(_forward_fn(self.problem, cand),
-                                    jax.ShapeDtypeStruct((self.problem.batch, *self.problem.extents),
-                                                         self.problem.input_dtype.name))
-        lowered = fn.lower(spec_shape)
-        self._inv_compiled = lowered.compile()
+
+        def build():
+            donate = (0,) if self.problem.inplace else ()
+            fn = jax.jit(_inverse_fn(self.problem, cand), donate_argnums=donate)
+            spec_shape = jax.eval_shape(_forward_fn(self.problem, cand),
+                                        jax.ShapeDtypeStruct((self.problem.batch, *self.problem.extents),
+                                                             self.problem.input_dtype.name))
+            return fn.lower(spec_shape).compile()
+
+        self._inv_compiled = cached_build(
+            self.plan_cache, self.cache_events, "init_inverse",
+            PlanCache.executable_key(self._device_kind(), self.problem,
+                                     cand, "inverse"), build)
         self._plan_bytes += _plan_bytes(self._inv_compiled)
 
     # --- execution --------------------------------------------------------
@@ -209,41 +243,41 @@ class JaxFFTClient(FFTClient):
         return np.asarray(self._buf)
 
 
-def _plan_bytes(compiled) -> int:
-    try:
-        ma = compiled.memory_analysis()
-        return int(getattr(ma, "temp_size_in_bytes", 0) +
-                   getattr(ma, "generated_code_size_in_bytes", 0))
-    except Exception:
-        return 0
+_plan_bytes = executable_bytes
 
 
 # --- one "binary" per library, as in the paper ------------------------------
+@register_client()
 class XlaFFTClient(JaxFFTClient):
     title = "XlaFFT"
     backend_filter = "xla"
 
 
+@register_client()
 class StockhamClient(JaxFFTClient):
     title = "Stockham"
     backend_filter = "stockham"
 
 
+@register_client()
 class FourStepClient(JaxFFTClient):
     title = "FourStep"
     backend_filter = "fourstep"
 
 
+@register_client()
 class FourStepPallasClient(JaxFFTClient):
     title = "FourStepPallas"
     backend_filter = "fourstep_pallas"
 
 
+@register_client()
 class BluesteinClient(JaxFFTClient):
     title = "Bluestein"
     backend_filter = "bluestein"
 
 
+@register_client()
 class PlannedClient(JaxFFTClient):
     """Planner-driven client (rigor decides the backend), fftw-style."""
     title = "Planned"

@@ -57,6 +57,111 @@ class Plan:
     measured_ms: dict[str, float] = field(default_factory=dict)  # per-candidate timings
 
 
+# ---------------------------------------------------------------------------
+# Plan/executable cache (engine layer 2)
+# ---------------------------------------------------------------------------
+@dataclass
+class PlanCacheStats:
+    """Cold/warm accounting: misses pay the measured compile (cold) cost,
+    hits dispatch the memoized executable (warm)."""
+
+    hits: int = 0
+    misses: int = 0
+    cold_ms: float = 0.0   # total time spent building on misses
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "cold_ms": self.cold_ms}
+
+
+class PlanCache:
+    """Memoizes lowered/compiled executables and measured plan selections.
+
+    Keys include the *device kind* (an executable compiled for one device
+    kind must never serve another), the problem signature (extents,
+    precision, kind, batch), the candidate (backend + knobs), and the
+    transform direction.  Without the cache every repetition re-lowers and
+    re-compiles (the honest per-run planning measurement of paper Figs. 4-5);
+    with it, the first run to need an executable — possibly a warmup, whose
+    cold-compile ops are then emitted with a negative run index — pays the
+    measured cold compile, and warm repetitions reuse the executable.  Both
+    quantities stay measured, and result rows carry a ``plan_cache``
+    hit/miss marker so they remain distinguishable downstream.
+    """
+
+    def __init__(self) -> None:
+        self._execs: dict[str, Any] = {}
+        self._plans: dict[str, Any] = {}
+        self.stats = PlanCacheStats()
+
+    # --- keys -------------------------------------------------------------
+    @staticmethod
+    def executable_key(device_kind: str, problem: Problem,
+                       candidate: "Candidate | str", direction: str) -> str:
+        ck = candidate.key() if isinstance(candidate, Candidate) else str(candidate)
+        return f"exec|{device_kind}|{problem.signature()}|{ck}|{direction}"
+
+    @staticmethod
+    def plan_key(device_kind: str, problem: Problem, rigor: "PlanRigor",
+                 scope: str = "") -> str:
+        return f"plan|{device_kind}|{problem.signature()}|{rigor.value}|{scope}"
+
+    # --- lookups ----------------------------------------------------------
+    def executable(self, key: str, build: Callable[[], Any]
+                   ) -> tuple[Any, str, float]:
+        """Return ``(executable, 'hit'|'miss', elapsed_ms)``.
+
+        ``build`` runs only on a miss; its wall time is the measured cold
+        compile cost.
+        """
+        if key in self._execs:
+            self.stats.hits += 1
+            return self._execs[key], "hit", 0.0
+        t0 = time.perf_counter()
+        compiled = build()
+        ms = (time.perf_counter() - t0) * 1e3
+        self._execs[key] = compiled
+        self.stats.misses += 1
+        self.stats.cold_ms += ms
+        return compiled, "miss", ms
+
+    def plan(self, key: str, make: Callable[[], Any]) -> tuple[Any, str]:
+        """Memoized plan selection (candidate sweeps run at most once per
+        key — a MEASURE sweep over repeated repetitions stops re-compiling
+        every candidate).  ``None`` results (wisdom misses) are cached too:
+        a deterministic miss stays a miss."""
+        if key in self._plans:
+            return self._plans[key], "hit"
+        plan = make()
+        self._plans[key] = plan
+        return plan, "miss"
+
+    def __len__(self) -> int:
+        return len(self._execs)
+
+
+def cached_build(plan_cache: "PlanCache | None", events: dict, op_name: str,
+                 key: str, build: Callable[[], Any]):
+    """Memoize-or-build an executable, recording the hit/miss event for the
+    result rows.  With no cache attached this is just ``build()`` — the
+    per-run recompile measurement."""
+    if plan_cache is None:
+        return build()
+    compiled, event, _ = plan_cache.executable(key, build)
+    events[op_name] = event
+    return compiled
+
+
+def executable_bytes(compiled) -> int:
+    """Bytes attributable to a compiled executable (plan size analogue)."""
+    try:
+        ma = compiled.memory_analysis()
+        return int(getattr(ma, "temp_size_in_bytes", 0) +
+                   getattr(ma, "generated_code_size_in_bytes", 0))
+    except Exception:
+        return 0
+
+
 def _pow2(n: int) -> bool:
     return n >= 1 and (n & (n - 1)) == 0
 

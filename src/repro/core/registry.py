@@ -1,0 +1,56 @@
+"""Decorator-based client registry (engine layer 3a).
+
+gearshifft builds one binary per FFT library; our analogue is one registered
+client class per backend "binary".  The registry replaces the hardcoded
+``CLIENTS`` dict the CLI used to carry: any module — ``repro.core.clients.*``
+or an out-of-tree ``benchmarks/*`` table — registers its clients with
+
+    @register_client()
+    class MyClient: ...
+
+and the CLI discovers them by name.  Re-registering the *same* class under
+the same name is a no-op (modules may be imported twice); registering a
+*different* class under a taken name is rejected loudly.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Type
+
+_REGISTRY: dict[str, Type] = {}
+
+
+def register_client(name: str | None = None) -> Callable[[Type], Type]:
+    """Class decorator: ``@register_client()`` or ``@register_client("Name")``.
+
+    The registered name defaults to the class's ``title`` attribute (falling
+    back to ``__name__``).
+    """
+
+    def deco(cls: Type) -> Type:
+        key = name or getattr(cls, "title", None) or cls.__name__
+        existing = _REGISTRY.get(key)
+        if existing is not None and existing is not cls:
+            raise ValueError(
+                f"client name {key!r} already registered by "
+                f"{existing.__module__}.{existing.__qualname__}")
+        _REGISTRY[key] = cls
+        return cls
+
+    return deco
+
+
+def get_client(name: str) -> Type:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        known = ", ".join(sorted(_REGISTRY)) or "<none>"
+        raise KeyError(f"unknown client {name!r}; registered: {known}") from None
+
+
+def client_names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def registered_clients() -> dict[str, Type]:
+    return dict(_REGISTRY)

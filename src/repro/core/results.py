@@ -1,24 +1,45 @@
 """Standardized result output (paper design goal: 'standardized output
-format for downstream statistical analysis').
+format for downstream statistical analysis') — engine layer 3b.
 
-One CSV row per (benchmark configuration, run, operation) — the layout the
+One row per (benchmark configuration, run, operation) — the layout the
 paper's R analysis scripts consume: identification columns first, then the
-measurement.  ``result.csv`` is the default sink, like gearshifft.
+measurement.  Rows flow through a :class:`ResultSink`:
+
+* :class:`ResultWriter` — the original buffer-everything writer (kept for
+  in-memory aggregation by the table scripts and tests);
+* :class:`CsvSink` — streaming CSV, each row flushed as it is produced, so
+  long suites never hold the result set in memory and a killed run keeps
+  everything measured so far;
+* :class:`JsonlSink` — streaming JSON-lines with native types (bools and
+  numbers survive), the machine-friendly format for downstream analysis.
+
+``result.csv`` is the default sink, like gearshifft.  The ``plan_cache``
+column exists only when the plan/executable cache is enabled — with the
+cache off, the schema is byte-for-byte the original column order.
 """
 
 from __future__ import annotations
 
 import csv
 import io
+import json
 import os
 import statistics
 from dataclasses import dataclass, field
-
 
 COLUMNS = [
     "library", "device", "extents", "rank", "extent_class", "precision",
     "kind", "rigor", "run", "op", "time_ms", "bytes", "success", "error",
 ]
+
+#: Extra column emitted when the plan/executable cache is enabled.
+PLAN_CACHE_COLUMN = "plan_cache"
+
+
+def columns_for(plan_cache: bool) -> list[str]:
+    """Result schema: seed columns, plus cold/warm cache accounting when the
+    plan cache is on."""
+    return COLUMNS + [PLAN_CACHE_COLUMN] if plan_cache else list(COLUMNS)
 
 
 @dataclass
@@ -37,17 +58,127 @@ class Row:
     bytes: int = 0
     success: bool = True
     error: str = ""
+    plan_cache: str = ""   # ''|'hit'|'miss' (column present only when caching)
 
-    def as_list(self):
-        return [getattr(self, c) for c in COLUMNS]
+    def as_list(self, columns: list[str] = COLUMNS):
+        return [getattr(self, c) for c in columns]
+
+    def as_dict(self, columns: list[str] = COLUMNS):
+        return {c: getattr(self, c) for c in columns}
+
+
+class ResultSink:
+    """Row consumer interface: ``add`` rows, ``save`` to finalize.
+
+    Sinks track row/failure counts so drivers can report without re-reading
+    what was written.
+    """
+
+    def __init__(self, path: str, columns: list[str] | None = None):
+        self.path = path
+        self.columns = list(columns) if columns is not None else list(COLUMNS)
+        self.n_rows = 0
+        self.n_failures = 0
+
+    def add(self, row: Row) -> None:
+        self.n_rows += 1
+        if not row.success:
+            self.n_failures += 1
+        self._write(row)
+
+    def _write(self, row: Row) -> None:
+        raise NotImplementedError
+
+    def save(self) -> str:
+        """Finalize (close handles / write buffered rows); returns the path."""
+        return self.path
+
+    # alias so sinks work in with-statement style call sites
+    def close(self) -> str:
+        return self.save()
+
+    def _open(self):
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        return open(self.path, "w", newline="")
+
+
+class CsvSink(ResultSink):
+    """Streaming CSV: header on first row, every row flushed immediately."""
+
+    def __init__(self, path: str, columns: list[str] | None = None):
+        super().__init__(path, columns)
+        self._fh = None
+        self._csv = None
+
+    def _write(self, row: Row) -> None:
+        if self._fh is None:
+            self._fh = self._open()
+            self._csv = csv.writer(self._fh)
+            self._csv.writerow(self.columns)
+        self._csv.writerow(row.as_list(self.columns))
+        self._fh.flush()
+
+    def save(self) -> str:
+        if self._fh is None:       # no rows: still leave a valid header-only file
+            self._fh = self._open()
+            csv.writer(self._fh).writerow(self.columns)
+        self._fh.close()
+        self._fh = self._csv = None
+        return self.path
+
+
+class JsonlSink(ResultSink):
+    """Streaming JSON-lines: one object per row, same column order as CSV."""
+
+    def __init__(self, path: str, columns: list[str] | None = None):
+        super().__init__(path, columns)
+        self._fh = None
+
+    def _write(self, row: Row) -> None:
+        if self._fh is None:
+            self._fh = self._open()
+        self._fh.write(json.dumps(row.as_dict(self.columns)) + "\n")
+        self._fh.flush()
+
+    def save(self) -> str:
+        if self._fh is None:
+            self._fh = self._open()
+        self._fh.close()
+        self._fh = None
+        return self.path
+
+
+def open_sink(path: str, fmt: str | None = None,
+              columns: list[str] | None = None) -> ResultSink:
+    """Sink factory: explicit ``fmt`` ('csv'|'jsonl') or by file extension."""
+    if fmt is None:
+        fmt = "jsonl" if path.endswith((".jsonl", ".ndjson")) else "csv"
+    if fmt == "jsonl":
+        return JsonlSink(path, columns)
+    if fmt == "csv":
+        return CsvSink(path, columns)
+    raise ValueError(f"unknown sink format {fmt!r}")
 
 
 @dataclass
-class ResultWriter:
+class ResultWriter(ResultSink):
+    """Buffer-everything sink: keeps rows in memory for aggregation
+    (paper-style figures) and writes the whole CSV on :meth:`save`."""
+
     path: str = "result.csv"
     rows: list[Row] = field(default_factory=list)
+    columns: list[str] = field(default_factory=lambda: list(COLUMNS))
+
+    def __post_init__(self):
+        self.n_rows = 0
+        self.n_failures = 0
 
     def add(self, row: Row) -> None:
+        self.n_rows += 1
+        if not row.success:
+            self.n_failures += 1
         self.rows.append(row)
 
     def save(self) -> str:
@@ -56,17 +187,17 @@ class ResultWriter:
             os.makedirs(d, exist_ok=True)
         with open(self.path, "w", newline="") as f:
             w = csv.writer(f)
-            w.writerow(COLUMNS)
+            w.writerow(self.columns)
             for r in self.rows:
-                w.writerow(r.as_list())
+                w.writerow(r.as_list(self.columns))
         return self.path
 
     def to_csv_string(self) -> str:
         buf = io.StringIO()
         w = csv.writer(buf)
-        w.writerow(COLUMNS)
+        w.writerow(self.columns)
         for r in self.rows:
-            w.writerow(r.as_list())
+            w.writerow(r.as_list(self.columns))
         return buf.getvalue()
 
     # --- aggregation for the paper-style figures ---------------------------

@@ -31,17 +31,28 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.5 exposes shard_map at top level
+    shard_map = jax.shard_map
+except AttributeError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map
+
 from . import fourstep
 
 
 # ---------------------------------------------------------------------------
 # 1D: distributed four-step
 # ---------------------------------------------------------------------------
+def _axis_size(a):
+    if hasattr(jax.lax, "axis_size"):  # jax >= 0.5
+        return jax.lax.axis_size(a)
+    return jax.lax.psum(1, a)          # jax 0.4.x: constant-folded size
+
+
 def _combined_index(axes: tuple[str, ...]):
     """Row-major device index over one or more mesh axes (static sizes)."""
     idx = jax.lax.axis_index(axes[0])
     for a in axes[1:]:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * _axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 
@@ -113,13 +124,76 @@ def make_fft1d(mesh: Mesh, axis: str | tuple[str, ...], n: int,
         out = fft1d_shard(blk, n1, n2, p, axes, inverse=inverse)
         return out.reshape(-1)
 
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(spec_in,), out_specs=spec_in)
+    fn = shard_map(body, mesh=mesh, in_specs=(spec_in,), out_specs=spec_in)
     return jax.jit(fn), (n1, n2)
 
 
 def transposed_to_natural(y: jnp.ndarray, n1: int, n2: int) -> jnp.ndarray:
     """Undo the transposed spectrum order (host-side/test helper)."""
     return y.reshape(n1, n2).T.reshape(-1)
+
+
+def ifft1d_shard(y_block: jnp.ndarray, n1: int, n2: int, p: int,
+                 axes: tuple[str, ...]) -> jnp.ndarray:
+    """Inverse per-shard body consuming the TRANSPOSED spectrum produced by
+    :func:`fft1d_shard` (FFTW_MPI_TRANSPOSED_IN analogue).
+
+    y_block: (n1/P, n2) block-row k1-slab of Y[k1, k2] = X[k1 + k2*n1].
+    Returns (n1/P, n2) rows of the natural-order signal x[j1*n2 + j2].
+
+    Derivation (x[j] = 1/n sum_k X[k] W_n^{+jk}, j = j1*n2 + j2,
+    k = k1 + k2*n1; the cross term W_n^{+ j1*n2*k2*n1} = 1):
+
+        x[j1, j2] = 1/n1 sum_k1 W_{n1}^{+j1 k1} W_n^{+j2 k1}
+                    (1/n2 sum_k2 W_{n2}^{+j2 k2} Y[k1, k2])
+
+    i.e. the forward pipeline mirrored: row IDFTs (over k2, local) ->
+    twiddle -> transpose -> column IDFTs (over k1).  The two sub-transform
+    passes apply 1/n2 and 1/n1, so the global 1/n normalization comes out
+    exactly.  Same collective count as forward: two all_to_alls.
+    """
+    axis = axes if len(axes) > 1 else axes[0]
+    n = n1 * n2
+    # row IDFTs (over k2) — k2 is fully local, no communication
+    b = fourstep.fft(y_block, inverse=True)                # (n1/P, n2)
+    # twiddle W_n^{+ k1_global j2} with k1_global = idx*(n1/P) + local
+    idx = _combined_index(axes)
+    k1 = idx * (n1 // p) + jnp.arange(n1 // p)
+    j2 = jnp.arange(n2)
+    ang = (2.0 * jnp.pi / n) * (k1[:, None] * j2[None, :]).astype(jnp.float64)
+    b = b * jnp.exp(1j * ang).astype(b.dtype)
+    # transpose: k1 sharded -> k1 fully local, j2 sharded
+    bt = jax.lax.all_to_all(b, axis, split_axis=1, concat_axis=0,
+                            tiled=True)                    # (n1, n2/P)
+    # column IDFTs (over k1)
+    bt = jnp.moveaxis(fourstep.fft(jnp.moveaxis(bt, 0, -1), inverse=True),
+                      -1, 0)                               # x[j1, j2-slab]
+    # transpose back: rows j1 sharded, j2 local -> natural row-major layout
+    return jax.lax.all_to_all(bt, axis, split_axis=0, concat_axis=1,
+                              tiled=True)                  # (n1/P, n2)
+
+
+def make_ifft1d(mesh: Mesh, axis: str | tuple[str, ...], n: int):
+    """Build a jit-able inverse of :func:`make_fft1d`'s transform.
+
+    Input: the (n,) transposed-order spectrum sharded over ``axis`` exactly
+    as ``make_fft1d`` emitted it; output: the natural-order signal with the
+    same sharding — so ifft1d(fft1d(x)) == x without any reordering pass.
+    """
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    p = 1
+    for a in axes:
+        p *= mesh.shape[a]
+    n1, n2 = _choose_1d_factors(n, p)
+    spec = P(axes)
+
+    def body(yb):
+        blk = yb.reshape(n1 // p, n2)
+        out = ifft1d_shard(blk, n1, n2, p, axes)
+        return out.reshape(-1)
+
+    fn = shard_map(body, mesh=mesh, in_specs=(spec,), out_specs=spec)
+    return jax.jit(fn), (n1, n2)
 
 
 # ---------------------------------------------------------------------------
@@ -173,7 +247,7 @@ def make_fft3d(mesh: Mesh, row_axis, col_axis, shape: Sequence[int],
 
     in_spec = P(row_t, col_t, None)
     out_spec = P(None, row_t, col_t) if keep_transposed else in_spec
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(in_spec,), out_specs=out_spec)
+    fn = shard_map(body, mesh=mesh, in_specs=(in_spec,), out_specs=out_spec)
     return jax.jit(fn)
 
 

@@ -11,20 +11,27 @@ to any count — data parallelism over pods, DCN-connected).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit Auto axis types keep GSPMD semantics stable
+    from jax.sharding import AxisType
+
+    def _axis_kwargs(n: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n}
+except ImportError:  # jax 0.4.x: meshes are Auto-typed implicitly
+    def _axis_kwargs(n: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_mesh(shape, axes):
     """General helper (tests, examples) with stable Auto axis types."""
     return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+                         **_axis_kwargs(len(axes)))
 
 
 def dp_axes(mesh) -> tuple[str, ...]:
