@@ -1,5 +1,7 @@
-"""Shared benchmark plumbing: every table prints ``name,us_per_call,derived``
-CSV rows (one per measured configuration) to stdout."""
+"""Shared benchmark plumbing: every table declares a
+:class:`repro.core.suite.SuiteSpec` and runs it through :func:`run_suite`;
+results print as ``name,us_per_call,derived`` CSV rows (one per measured
+configuration) to stdout."""
 
 from __future__ import annotations
 
@@ -8,6 +10,8 @@ import time
 
 import numpy as np
 import jax
+
+from repro.core.suite import run_suite  # noqa: F401  (shared by every table)
 
 
 def emit(name: str, us: float, derived: str = "") -> None:

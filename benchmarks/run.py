@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV; a few minutes total on one CPU core.
 Tables map to the paper: overhead=Fig2, tts=Fig3, plan_rigor=Figs4-5,
 backends=Fig6, radix=Fig7, dtypes=Fig8; kernels + lm_steps are the
 beyond-paper extensions (Pallas kernels, LM steps through the same runner).
+Every table is a declarative :class:`repro.core.suite.SuiteSpec` executed by
+the shared ``run_suite`` helper.
 """
 
 from __future__ import annotations
@@ -17,8 +19,20 @@ TABLES = ["overhead", "tts", "plan_rigor", "backends", "radix", "dtypes",
           "kernels", "lm_steps"]
 
 
-def main() -> None:
-    want = [a for a in sys.argv[1:] if not a.startswith("-")] or TABLES
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    flags = [a for a in argv if a.startswith("-")]
+    want = [a for a in argv if not a.startswith("-")] or TABLES
+    # validate up front: a typo'd table must not surface as a bare
+    # ImportError halfway through a long run
+    unknown = sorted(set(want) - set(TABLES))
+    if unknown:
+        print(f"unknown table(s): {', '.join(unknown)}\n"
+              f"available: {', '.join(TABLES)}", file=sys.stderr)
+        return 2
+    if flags:
+        print(f"warning: ignoring unrecognized flag(s): {' '.join(flags)}",
+              file=sys.stderr)
     print("name,us_per_call,derived")
     for name in want:
         mod = __import__(f"benchmarks.table_{name}", fromlist=["run"])
@@ -26,7 +40,8 @@ def main() -> None:
         mod.run()
         print(f"# table_{name} done in {time.perf_counter()-t0:.1f}s",
               file=sys.stderr)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -5,22 +5,27 @@ fourstep_pallas = fused kernel in interpret mode off-TPU)."""
 
 from __future__ import annotations
 
-from repro.core.benchmark import Benchmark, BenchmarkConfig
-from repro.core.client import Context
-from repro.core.tree import build_tree
-from repro.core.clients.jax_fft import (BluesteinClient, FourStepClient,
-                                        StockhamClient, XlaFFTClient)
-from .common import emit
+from dataclasses import replace
+
+from repro.core.suite import SuiteSpec
+from .common import emit, run_suite
+
+# plan_cache=False preserves the paper's per-run recompile measurement
+SPECS = {
+    "1d": SuiteSpec(clients=("XlaFFT", "Stockham", "FourStep", "Bluestein"),
+                    extents=("256", "4096", "65536"),
+                    kinds=("Outplace_Real",), precisions=("float",),
+                    warmups=1, plan_cache=False, output=None),
+    "3d": SuiteSpec(clients=("XlaFFT", "Stockham", "FourStep", "Bluestein"),
+                    extents=("16x16x16", "32x32x32"),
+                    kinds=("Outplace_Real",), precisions=("float",),
+                    warmups=1, plan_cache=False, output=None),
+}
 
 
 def run(reps: int = 3) -> None:
-    clients = [XlaFFTClient, StockhamClient, FourStepClient, BluesteinClient]
-    for tag, extents in (("1d", [(256,), (4096,), (65536,)]),
-                         ("3d", [(16,) * 3, (32,) * 3])):
-        nodes = build_tree(clients, extents, kinds=("Outplace_Real",),
-                           precisions=("float",))
-        cfg = BenchmarkConfig(warmups=1, repetitions=reps, output="/dev/null")
-        writer = Benchmark(Context(), cfg).run_nodes(nodes)
+    for tag, spec in SPECS.items():
+        results = run_suite(replace(spec, repetitions=reps))
         for (lib, ext, prec, kind, rg, op, mean, sd, n) in \
-                writer.aggregate(op="execute_forward"):
+                results.aggregate(op="execute_forward"):
             emit(f"backend/{tag}/{lib}/{ext}", mean * 1e3)

@@ -4,28 +4,29 @@ regime; f64 ~2x slower than f32."""
 
 from __future__ import annotations
 
-from repro.core.benchmark import Benchmark, BenchmarkConfig
-from repro.core.client import Context
-from repro.core.tree import build_tree
-from repro.core.clients.jax_fft import XlaFFTClient
-from .common import emit
+from dataclasses import replace
+
+from repro.core.suite import SuiteSpec
+from .common import emit, run_suite
+
+EXTENTS = ("4096", "65536", "32x32x32")
+
+SPECS = (
+    # 8a: real vs complex, single precision
+    SuiteSpec(clients=("XlaFFT",), extents=EXTENTS,
+              kinds=("Outplace_Real", "Outplace_Complex"),
+              precisions=("float",),
+              warmups=1, plan_cache=False, output=None),
+    # 8b: single vs double, real input
+    SuiteSpec(clients=("XlaFFT",), extents=EXTENTS,
+              kinds=("Outplace_Real",), precisions=("float", "double"),
+              warmups=1, plan_cache=False, output=None),
+)
 
 
 def run(reps: int = 3) -> None:
-    extents = [(4096,), (65536,), (32, 32, 32)]
-    # 8a: real vs complex, single precision
-    nodes = build_tree([XlaFFTClient], extents,
-                       kinds=("Outplace_Real", "Outplace_Complex"),
-                       precisions=("float",))
-    cfg = BenchmarkConfig(warmups=1, repetitions=reps, output="/dev/null")
-    writer = Benchmark(Context(), cfg).run_nodes(nodes)
-    for (lib, ext, prec, kind, rg, op, mean, sd, n) in \
-            writer.aggregate(op="execute_forward"):
-        emit(f"dtype/{kind}/{prec}/{ext}", mean * 1e3)
-    # 8b: single vs double, real input
-    nodes = build_tree([XlaFFTClient], extents, kinds=("Outplace_Real",),
-                       precisions=("float", "double"))
-    writer = Benchmark(Context(), cfg).run_nodes(nodes)
-    for (lib, ext, prec, kind, rg, op, mean, sd, n) in \
-            writer.aggregate(op="execute_forward"):
-        emit(f"dtype/{kind}/{prec}/{ext}", mean * 1e3)
+    for spec in SPECS:
+        results = run_suite(replace(spec, repetitions=reps))
+        for (lib, ext, prec, kind, rg, op, mean, sd, n) in \
+                results.aggregate(op="execute_forward"):
+            emit(f"dtype/{kind}/{prec}/{ext}", mean * 1e3)

@@ -1,37 +1,172 @@
 """Beyond-paper: Pallas kernel micro-benchmarks (interpret mode off-TPU —
 numbers are correctness-path timings; the roofline table speaks for TPU) and
-the fused-fftconv vs unfused comparison that motivates the kernel."""
+the fused-fftconv vs unfused comparison that motivates the kernel.
+
+Each kernel variant is a registered client behind a minimal op schedule
+(allocate → upload → execute_forward → download → destroy), so the table is
+a declarative spec through the shared engine like every other table.
+"""
 
 from __future__ import annotations
 
+from dataclasses import replace
+
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from repro.fft import fftconv as fftconv_mod
-from repro.kernels.fftconv import ops as conv_ops
-from repro.kernels.fft4step import ops as fs_ops
-from .common import emit, time_fn, rand_complex
+from repro.core.client import Context, Problem
+from repro.core.registry import register_client
+from repro.core.schedule import OpSchedule, OpStep
+from repro.core.suite import SuiteSpec
+from .common import emit, rand_complex, run_suite
+
+#: Direct-call micro-benchmarks: no separate planning/inverse ops.
+KERNEL_SCHEDULE = OpSchedule("kernel", (
+    OpStep("allocate", "allocate"),
+    OpStep("upload", "upload", needs_input=True,
+           bytes_method="get_transfer_size"),
+    OpStep("execute_forward", "execute_forward"),
+    OpStep("download", "download", captures_output=True),
+    OpStep("destroy", "destroy"),
+))
+
+
+class KernelClient:
+    """One kernel variant behind the minimal schedule; subclasses implement
+    ``make_host_input`` and ``_call``."""
+
+    title = "kernel"
+    schedule = KERNEL_SCHEDULE
+
+    def __init__(self, problem: Problem, context: Context, rigor=None,
+                 wisdom=None, plan_cache=None):
+        self.problem = problem
+        self.context = context
+        self.cache_events: dict[str, str] = {}
+        self._args = None
+        self._out = None
+        self._nbytes = 0
+
+    @classmethod
+    def check(cls, problem, host_in, out, error_bound):
+        ok = bool(np.all(np.isfinite(np.asarray(out))))
+        return ok, "" if ok else "non-finite kernel output"
+
+    def allocate(self) -> None:
+        pass
+
+    def destroy(self) -> None:
+        self._args = self._out = None
+
+    def get_transfer_size(self) -> int:
+        return self._nbytes
+
+    def upload(self, host_args) -> None:
+        self._nbytes = sum(np.asarray(a).nbytes for a in host_args)
+        self._args = tuple(jax.device_put(a) for a in host_args)
+        jax.block_until_ready(self._args)
+
+    def execute_forward(self) -> None:
+        self._out = self._call(*self._args)
+        jax.block_until_ready(self._out)
+
+    def download(self) -> np.ndarray:
+        return np.asarray(self._out)
+
+    def _call(self, *args):
+        raise NotImplementedError
+
+
+@register_client()
+class Fft4StepInterpKernel(KernelClient):
+    title = "KernelFft4StepInterp"
+
+    @classmethod
+    def make_host_input(cls, problem: Problem, seed: int):
+        return (rand_complex((problem.batch, problem.extents[0]), seed=seed),)
+
+    def _call(self, x):
+        from repro.kernels.fft4step import ops as fs_ops
+        return fs_ops.fft(x, interpret=True)
+
+
+@register_client()
+class FourStepJnpKernel(KernelClient):
+    title = "KernelFourStepJnp"
+
+    @classmethod
+    def make_host_input(cls, problem: Problem, seed: int):
+        return (rand_complex((problem.batch, problem.extents[0]), seed=seed),)
+
+    def _call(self, x):
+        from repro.fft import fourstep
+        return fourstep.fft(x)
+
+
+# fused-vs-unfused fftconv workload: c channels, b batch, length L, taps K
+C, B, K = 4, 4, 64
+
+
+@register_client()
+class FftconvFusedKernel(KernelClient):
+    title = "KernelFftconvFused"
+
+    @classmethod
+    def make_host_input(cls, problem: Problem, seed: int):
+        L = problem.extents[0]
+        xs = np.random.default_rng(0).standard_normal((C, B, L)).astype(np.float32)
+        h = np.random.default_rng(1).standard_normal((C, K)).astype(np.float32)
+        return (xs, h)
+
+    def _call(self, xs, h):
+        from repro.kernels.fftconv import ops as conv_ops
+        return conv_ops.fftconv(xs, h, interpret=True)
+
+
+@register_client()
+class FftconvUnfusedKernel(KernelClient):
+    title = "KernelFftconvUnfused"
+
+    @classmethod
+    def make_host_input(cls, problem: Problem, seed: int):
+        L = problem.extents[0]
+        xs = np.random.default_rng(0).standard_normal((C, B, L)).astype(np.float32)
+        h = np.random.default_rng(1).standard_normal((C, K)).astype(np.float32)
+        # same workload in the unfused path's (B, L, D) layout
+        xt = np.moveaxis(xs.reshape(C * B, L)[None], -1, 1).reshape(1, L, C * B)
+        ht = np.repeat(h, B, axis=0).T
+        return (np.ascontiguousarray(xt), np.ascontiguousarray(ht))
+
+    def _call(self, xt, ht):
+        from repro.fft import fftconv as fftconv_mod
+        return fftconv_mod.fftconv(jnp.asarray(xt), jnp.asarray(ht),
+                                   backend="xla")
+
+
+SPECS = (
+    SuiteSpec(clients=("KernelFft4StepInterp", "KernelFourStepJnp"),
+              extents=("4096",), batch=8,
+              kinds=("Outplace_Complex",), precisions=("float",),
+              warmups=2, plan_cache=False, output=None),
+    SuiteSpec(clients=("KernelFftconvFused", "KernelFftconvUnfused"),
+              extents=("2048",), batch=1,
+              kinds=("Outplace_Real",), precisions=("float",),
+              warmups=2, plan_cache=False, output=None),
+)
+
+#: client title -> the table row name (kept from the pre-spec version)
+NAMES = {
+    "KernelFft4StepInterp": "kernel/fft4step_interp/4096x8",
+    "KernelFourStepJnp": "kernel/fourstep_jnp/4096x8",
+    "KernelFftconvFused": "kernel/fftconv_fused_interp/2048",
+    "KernelFftconvUnfused": "kernel/fftconv_unfused_xla/2048",
+}
 
 
 def run(reps: int = 3) -> None:
-    x = jnp.asarray(rand_complex((8, 4096)))
-    emit("kernel/fft4step_interp/4096x8",
-         time_fn(lambda v: fs_ops.fft(v, interpret=True), x, reps=reps))
-    emit("kernel/fourstep_jnp/4096x8",
-         time_fn(lambda v: __import__("repro.fft.fourstep", fromlist=["fft"]).fft(v),
-                 x, reps=reps))
-
-    c, b, L, K = 4, 4, 2048, 64
-    xs = jnp.asarray(np.random.default_rng(0).standard_normal((c, b, L)),
-                     jnp.float32)
-    h = jnp.asarray(np.random.default_rng(1).standard_normal((c, K)),
-                    jnp.float32)
-    emit("kernel/fftconv_fused_interp/2048",
-         time_fn(lambda a, f: conv_ops.fftconv(a, f, interpret=True), xs, h,
-                 reps=reps))
-    # unfused jnp path on the same workload (x as (B, L, D) layout)
-    xt = jnp.moveaxis(xs.reshape(c * b, L)[None], -1, 1).reshape(1, L, c * b)
-    ht = jnp.repeat(h, b, axis=0).T
-    emit("kernel/fftconv_unfused_xla/2048",
-         time_fn(lambda a, f: fftconv_mod.fftconv(a, f, backend="xla"), xt, ht,
-                 reps=reps))
+    for spec in SPECS:
+        results = run_suite(replace(spec, repetitions=reps))
+        for (lib, ext, prec, kind, rg, op, mean, sd, n) in \
+                results.aggregate(op="execute_forward"):
+            emit(NAMES.get(lib, f"kernel/{lib}/{ext}"), mean * 1e3)

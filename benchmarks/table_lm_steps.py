@@ -13,21 +13,23 @@ measure pure step dispatch, exactly like warm FFT repetitions.
 
 from __future__ import annotations
 
+from dataclasses import replace
+
 import numpy as np
 import jax
 
 from repro.configs.base import get_config
-from repro.core.benchmark import Benchmark, BenchmarkConfig
 from repro.core.client import Context, Problem
 from repro.core.plan import PlanCache, cached_build, executable_bytes
 from repro.core.registry import register_client
 from repro.core.schedule import OpSchedule, OpStep
-from repro.core.tree import BenchNode
+from repro.core.suite import SuiteSpec
+from repro.core.wisdom import Wisdom
 from repro.data.pipeline import DataConfig, SyntheticTokens
 from repro.models.model import Model
 from repro.train.optimizer import OptConfig, init_opt_state
 from repro.train.trainer import build_train_step
-from .common import emit
+from .common import emit, run_suite
 
 ARCHS = ["qwen3-1.7b", "granite-moe-1b-a400m", "xlstm-350m", "hymba-1.5b"]
 SEQ_LEN = 64
@@ -55,7 +57,8 @@ class LMStepClient:
     schedule = LM_SCHEDULE
 
     def __init__(self, problem: Problem, context: Context, rigor=None,
-                 wisdom=None, plan_cache: PlanCache | None = None):
+                 wisdom: Wisdom | None = None,
+                 plan_cache: PlanCache | None = None):
         self.problem = problem
         self.context = context
         self.plan_cache = plan_cache
@@ -175,16 +178,20 @@ def _registered(arch: str, mode: str) -> type:
 
 CLIENTS = {(a, m): _registered(a, m) for a in ARCHS for m in ("train", "decode")}
 
+#: Declarative spec: clients by registered name, extents = the sequence
+#: length, batch = the LM batch.  plan_cache=True memoizes the compiled step
+#: so warm repetitions measure pure step dispatch.
+SPEC = SuiteSpec(clients=tuple(CLIENTS[(a, m)].title
+                               for a in ARCHS for m in ("train", "decode")),
+                 extents=(str(SEQ_LEN),), kinds=("Outplace_Real",),
+                 precisions=("float",), batch=BATCH,
+                 warmups=1, plan_cache=True, output=None)
+
 
 def run(reps: int = 3) -> None:
-    nodes = [BenchNode(CLIENTS[(arch, mode)],
-                       Problem((SEQ_LEN,), "Outplace_Real", "float", batch=BATCH))
-             for arch in ARCHS for mode in ("train", "decode")]
-    cfg = BenchmarkConfig(warmups=1, repetitions=reps, output="/dev/null")
-    bench = Benchmark(Context(), cfg, plan_cache=PlanCache())
-    writer = bench.run_nodes(nodes)
+    results = run_suite(replace(SPEC, repetitions=reps))
     for (lib, ext, prec, kind, rigor, op, mean, sd, n) in \
-            writer.aggregate(op="execute_forward"):
+            results.aggregate(op="execute_forward"):
         mode, arch = ("train", lib[len("LMTrain-"):]) \
             if lib.startswith("LMTrain-") else ("decode", lib[len("LMDecode-"):])
         emit(f"lm/{mode}_step/{arch}", mean * 1e3, f"reduced b{BATCH}s{SEQ_LEN}")

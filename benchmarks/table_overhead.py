@@ -9,16 +9,21 @@ shrinking with size.
 from __future__ import annotations
 
 import time
+from dataclasses import replace
 
 import numpy as np
 import jax
 
-from repro.core.benchmark import Benchmark, BenchmarkConfig, make_input
-from repro.core.client import Context, Problem
-from repro.core.tree import build_tree
-from repro.core.clients.jax_fft import XlaFFTClient, _forward_fn, _inverse_fn
+from repro.core.benchmark import make_input
+from repro.core.client import Problem
+from repro.core.clients.jax_fft import _forward_fn, _inverse_fn
 from repro.core.plan import Candidate
-from .common import emit
+from repro.core.suite import SuiteSpec
+from .common import emit, run_suite
+
+SPEC = SuiteSpec(clients=("XlaFFT",), kinds=("Inplace_Real",),
+                 precisions=("float",), warmups=2, plan_cache=False,
+                 output=None)
 
 
 def _standalone_tts(problem: Problem, reps: int) -> float:
@@ -37,21 +42,15 @@ def _standalone_tts(problem: Problem, reps: int) -> float:
 
 def run(reps: int = 5) -> None:
     for ext in [(32, 32, 32), (64, 64, 64)]:
-        problem = Problem(ext, "Inplace_Real", "float")
-        nodes = build_tree([XlaFFTClient], [ext], kinds=("Inplace_Real",),
-                           precisions=("float",))
-        cfg = BenchmarkConfig(warmups=2, repetitions=reps, output="/dev/null")
-        writer = Benchmark(Context(), cfg).run_nodes(nodes)
-        # framework view: sum of measured per-op times (upload..download)
-        per_run = {}
-        for r in writer.rows:
-            if r.op in ("upload", "execute_forward", "execute_inverse",
-                        "download"):
-                per_run.setdefault(r.run, 0.0)
-                per_run[r.run] += r.time_ms
-        fw_us = 1e3 * np.mean(list(per_run.values()))
-        sa_us = _standalone_tts(problem, reps)
         name = "x".join(map(str, ext))
+        results = run_suite(replace(SPEC, extents=(name,), repetitions=reps))
+        # framework view: sum of measured per-op times (upload..download)
+        per_run: dict[int, float] = {}
+        for op in ("upload", "execute_forward", "execute_inverse", "download"):
+            for r in results.query(op=op):
+                per_run[r.run] = per_run.get(r.run, 0.0) + r.time_ms
+        fw_us = 1e3 * np.mean(list(per_run.values()))
+        sa_us = _standalone_tts(Problem(ext, "Inplace_Real", "float"), reps)
         emit(f"overhead/framework/{name}", fw_us, "per-op timers")
         emit(f"overhead/standalone_tts/{name}", sa_us, "single timer")
         emit(f"overhead/ratio/{name}", fw_us / sa_us * 100, "percent")

@@ -6,32 +6,35 @@ from __future__ import annotations
 
 import os
 import tempfile
+from dataclasses import replace
 
-from repro.core.benchmark import Benchmark, BenchmarkConfig
-from repro.core.client import Context
+from repro.core.extents import parse_extents
 from repro.core.plan import PlanRigor
-from repro.core.tree import build_tree
+from repro.core.suite import SuiteSpec
 from repro.core.wisdom import generate
-from repro.core.clients.jax_fft import PlannedClient
-from .common import emit
+from .common import emit, run_suite
+
+EXTENTS = ("256", "2048", "16x16x16", "32x32x32")
+
+# plan_cache=False: every repetition re-plans, the honest Figs. 4-5 cost
+SPEC = SuiteSpec(clients=("Planned",), extents=EXTENTS,
+                 kinds=("Inplace_Real",), precisions=("float",),
+                 warmups=1, plan_cache=False, output=None)
 
 
 def run(reps: int = 3) -> None:
-    extents = [(256,), (2048,), (16, 16, 16), (32, 32, 32)]
+    exts = [parse_extents(e) for e in EXTENTS]
     with tempfile.TemporaryDirectory() as td:
         wpath = os.path.join(td, "wisdom.json")
-        wisdom = generate(extents, wpath, rigor=PlanRigor.MEASURE,
-                          kinds=("Inplace_Real",))
+        generate(exts, wpath, rigor=PlanRigor.MEASURE, kinds=("Inplace_Real",))
         for rigor in (PlanRigor.ESTIMATE, PlanRigor.MEASURE,
                       PlanRigor.WISDOM_ONLY):
-            nodes = build_tree([PlannedClient], extents,
-                               kinds=("Inplace_Real",), precisions=("float",))
-            cfg = BenchmarkConfig(warmups=1, repetitions=reps, rigor=rigor,
-                                  output="/dev/null")
-            writer = Benchmark(Context(), cfg).run_nodes(nodes, wisdom=wisdom)
+            spec = replace(SPEC, repetitions=reps, rigor=rigor.value,
+                           wisdom=wpath)
+            results = run_suite(spec)
             for (lib, ext, prec, kind, rg, op, mean, sd, n) in \
-                    writer.aggregate(op="init_forward"):
+                    results.aggregate(op="init_forward"):
                 emit(f"plan_time/{rigor.value}/{ext}", mean * 1e3)
             for (lib, ext, prec, kind, rg, op, mean, sd, n) in \
-                    writer.aggregate(op="execute_forward"):
+                    results.aggregate(op="execute_forward"):
                 emit(f"fft_time/{rigor.value}/{ext}", mean * 1e3)

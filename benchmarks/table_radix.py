@@ -4,22 +4,22 @@ the planner (PlannedClient) picks the best feasible backend per class."""
 
 from __future__ import annotations
 
-from repro.core.benchmark import Benchmark, BenchmarkConfig
-from repro.core.client import Context
+from dataclasses import replace
+
 from repro.core.extents import classify
-from repro.core.tree import build_tree
-from repro.core.clients.jax_fft import PlannedClient, XlaFFTClient
-from .common import emit
+from repro.core.suite import SuiteSpec
+from .common import emit, run_suite
+
+SPEC = SuiteSpec(clients=("XlaFFT", "Planned"),
+                 extents=("1024", "960", str(19 * 19),        # 1D per class
+                          "16x16x16", "12x12x12", "19x19x19"),
+                 kinds=("Outplace_Real",), precisions=("float",),
+                 warmups=1, plan_cache=False, output=None)
 
 
 def run(reps: int = 3) -> None:
-    extents = [(1024,), (960,), (19 * 19,),          # 1D per class
-               (16, 16, 16), (12, 12, 12), (19, 19, 19)]
-    nodes = build_tree([XlaFFTClient, PlannedClient], extents,
-                       kinds=("Outplace_Real",), precisions=("float",))
-    cfg = BenchmarkConfig(warmups=1, repetitions=reps, output="/dev/null")
-    writer = Benchmark(Context(), cfg).run_nodes(nodes)
+    results = run_suite(replace(SPEC, repetitions=reps))
     for (lib, ext, prec, kind, rg, op, mean, sd, n) in \
-            writer.aggregate(op="execute_forward"):
+            results.aggregate(op="execute_forward"):
         cls = classify(tuple(int(v) for v in ext.split("x")))
         emit(f"radix/{cls}/{lib}/{ext}", mean * 1e3)

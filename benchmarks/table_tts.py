@@ -3,20 +3,24 @@ out-of-place forward transforms, per backend."""
 
 from __future__ import annotations
 
-from repro.core.benchmark import Benchmark, BenchmarkConfig
-from repro.core.client import Context
-from repro.core.tree import build_tree
-from repro.core.clients.jax_fft import FourStepClient, StockhamClient, XlaFFTClient
-from .common import emit
+from dataclasses import replace
+
+from repro.core.suite import SuiteSpec, SweepSpec
+from .common import emit, run_suite
+
+BASE = SuiteSpec(clients=("XlaFFT", "Stockham", "FourStep"),
+                 kinds=("Outplace_Real",), precisions=("float",),
+                 warmups=1, plan_cache=False, output=None)
 
 
 def run(max_exp: int = 5, reps: int = 3) -> None:
-    extents = [(2 ** e,) * 3 for e in range(3, max_exp + 1)]
-    nodes = build_tree([XlaFFTClient, StockhamClient, FourStepClient], extents,
-                       kinds=("Outplace_Real",), precisions=("float",))
-    cfg = BenchmarkConfig(warmups=1, repetitions=reps, output="/dev/null")
-    writer = Benchmark(Context(), cfg).run_nodes(nodes)
-    for (lib, ext, prec, kind, rigor, op, mean, sd, n) in writer.aggregate(op="total"):
+    spec = replace(BASE, repetitions=reps,
+                   sweeps=(SweepSpec("powerof2", rank=3,
+                                     min_exp=3, max_exp=max_exp),))
+    results = run_suite(spec)
+    for (lib, ext, prec, kind, rigor, op, mean, sd, n) in \
+            results.aggregate(op="total"):
         emit(f"tts/{lib}/{ext}", mean * 1e3, f"sd={sd*1e3:.1f}us n={n}")
-    for (lib, ext, prec, kind, rigor, op, mean, sd, n) in writer.aggregate(op="execute_forward"):
+    for (lib, ext, prec, kind, rigor, op, mean, sd, n) in \
+            results.aggregate(op="execute_forward"):
         emit(f"fft_only/{lib}/{ext}", mean * 1e3, f"sd={sd*1e3:.1f}us")

@@ -57,25 +57,19 @@ def main() -> None:
     err2 = np.abs(np.asarray(xr) - x1).max()
     print(f"1D inverse (TRANSPOSED_IN): roundtrip err = {err2:.2e}")
 
-    # the same path measured through the gearshifft Runner/OpSchedule
-    from repro.core.benchmark import Benchmark, BenchmarkConfig       # noqa: E402
-    from repro.core.client import Context, Problem                    # noqa: E402
-    from repro.core.plan import PlanCache                             # noqa: E402
-    from repro.core.tree import BenchNode                             # noqa: E402
-    from repro.core.clients.dist_fft import DistFFT1DClient           # noqa: E402
+    # the same path measured through the declarative Suite API
+    from repro.core.suite import Session, SuiteSpec                   # noqa: E402
 
-    nodes = [BenchNode(DistFFT1DClient,
-                       Problem((4096,), "Outplace_Complex", "float"))]
-    cache = PlanCache()
-    bench = Benchmark(Context(), BenchmarkConfig(warmups=1, repetitions=3,
-                                                 output="/dev/null"),
-                      plan_cache=cache)
-    writer = bench.run_nodes(nodes, verbose=True)
+    spec = SuiteSpec(clients=("DistFFT1D",), extents=("4096",),
+                     kinds=("Outplace_Complex",), precisions=("float",),
+                     warmups=1, repetitions=3, output=None, verbose=True)
+    results = Session().run(spec)
     for (lib, ext, prec, kind, rigor, op, mean, sd, cnt) in \
-            writer.aggregate(op="execute_forward"):
+            results.aggregate(op="execute_forward"):
         print(f"{lib} n={ext} on 8 devices: execute_forward "
               f"{mean*1e3:.1f} us (n={cnt})")
-    print(f"plan cache: {cache.stats.hits} hits, {cache.stats.misses} misses")
+    stats = results.plan_stats
+    print(f"plan cache: {stats.hits} hits, {stats.misses} misses")
 
 
 if __name__ == "__main__":

@@ -2,23 +2,36 @@
 extent class, with planner rigors and wisdom — a scaled-down version of the
 paper's experimental section that finishes in minutes on CPU.
 
+Demonstrates the programmatic Suite API: declarative ``SuiteSpec``s (extent
+sweeps included) executed by one shared ``Session``, result sets
+concatenated and written once.
+
   PYTHONPATH=src python examples/fft_benchmark_suite.py [-o suite.csv]
 """
 
 import argparse
 import os
 import tempfile
+from dataclasses import replace
 
-from repro.core.benchmark import Benchmark, BenchmarkConfig
-from repro.core.client import Context
-from repro.core.extents import (oddshape_extents, powerof2_extents,
-                                radix357_extents)
 from repro.core.plan import PlanRigor
-from repro.core.tree import build_tree
+from repro.core.suite import ResultSet, Session, SuiteSpec, SweepSpec
 from repro.core.wisdom import generate
-from repro.core.clients.jax_fft import (BluesteinClient, FourStepClient,
-                                        PlannedClient, StockhamClient,
-                                        XlaFFTClient)
+
+MAIN_SPEC = SuiteSpec(
+    clients=("XlaFFT", "Stockham", "FourStep", "Bluestein"),
+    sweeps=(SweepSpec("powerof2", rank=1, min_exp=6, max_exp=12),
+            SweepSpec("powerof2", rank=3, min_exp=3, max_exp=5),
+            SweepSpec("radix357", rank=1, count=4, start=96),
+            SweepSpec("oddshape", rank=1, count=3)),
+    kinds=("Outplace_Real", "Outplace_Complex", "Inplace_Real"),
+    precisions=("float", "double"),
+    warmups=1, plan_cache=False, output=None, verbose=True)
+
+RIGOR_SPEC = SuiteSpec(
+    clients=("Planned",), extents=("1024", "4096"),
+    kinds=("Outplace_Real",), precisions=("float",),
+    warmups=1, plan_cache=False, output=None, verbose=True)
 
 
 def main() -> None:
@@ -27,36 +40,24 @@ def main() -> None:
     ap.add_argument("--reps", type=int, default=3)
     args = ap.parse_args()
 
-    extents = (list(powerof2_extents(1, 6, 12)) +
-               list(powerof2_extents(3, 3, 5)) +
-               list(radix357_extents(1, count=4, start=96)) +
-               list(oddshape_extents(1, count=3)))
-    clients = [XlaFFTClient, StockhamClient, FourStepClient, BluesteinClient]
-    nodes = build_tree(clients, extents,
-                       kinds=("Outplace_Real", "Outplace_Complex",
-                              "Inplace_Real"),
-                       precisions=("float", "double"))
-    cfg = BenchmarkConfig(warmups=1, repetitions=args.reps, output=args.output)
-    writer = Benchmark(Context(), cfg).run_nodes(nodes, verbose=True)
+    session = Session()
+    results = [session.run(replace(MAIN_SPEC, repetitions=args.reps))]
 
     # planner rigors on a canonical subset, with fresh wisdom
     with tempfile.TemporaryDirectory() as td:
-        wisdom = generate([(1024,), (4096,)], os.path.join(td, "w.json"),
-                          rigor=PlanRigor.MEASURE)
+        wpath = os.path.join(td, "w.json")
+        generate([(1024,), (4096,)], wpath, rigor=PlanRigor.MEASURE)
         for rigor in (PlanRigor.ESTIMATE, PlanRigor.MEASURE,
                       PlanRigor.WISDOM_ONLY):
-            nodes = build_tree([PlannedClient], [(1024,), (4096,)],
-                               kinds=("Outplace_Real",), precisions=("float",))
-            cfg2 = BenchmarkConfig(warmups=1, repetitions=args.reps,
-                                   rigor=rigor, output=args.output)
-            bench = Benchmark(Context(), cfg2)
-            bench.writer = writer  # append into the same CSV
-            bench.run_nodes(nodes, wisdom=wisdom, verbose=True)
+            results.append(session.run(replace(
+                RIGOR_SPEC, repetitions=args.reps, rigor=rigor.value,
+                wisdom=wpath)))
 
-    path = writer.save()
-    n_fail = sum(1 for r in writer.rows if not r.success)
-    print(f"\nwrote {len(writer.rows)} rows to {path} ({n_fail} failed "
-          f"configs, e.g. Stockham on non-pow2 extents — recorded, not fatal)")
+    combined = ResultSet.concat(results)
+    path = combined.save(args.output)
+    print(f"\nwrote {combined.n_rows} rows to {path} "
+          f"({combined.n_failures} failed configs, e.g. Stockham on non-pow2 "
+          f"extents — recorded, not fatal)")
 
 
 if __name__ == "__main__":

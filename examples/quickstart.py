@@ -1,29 +1,27 @@
-"""Quickstart: benchmark two FFT problems through the gearshifft-style API
+"""Quickstart: benchmark two FFT problems through the declarative Suite API
 and print the standardized CSV (paper §2.2 usage example).
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core.benchmark import Benchmark, BenchmarkConfig
-from repro.core.client import Context
-from repro.core.extents import parse_extents
-from repro.core.tree import build_tree, select
-from repro.core.clients.jax_fft import FourStepClient, XlaFFTClient
+from repro.core.suite import Session, SuiteSpec
 
 
 def main() -> None:
     # the paper's CLI example:  gearshifft_clfft -e 128x128 1024 -r */float/*/Inplace_Real
-    extents = [parse_extents("128x128"), parse_extents("1024")]
-    nodes = build_tree([XlaFFTClient, FourStepClient], extents)
-    nodes = select(nodes, "*/float/*/Inplace_Real")
-    cfg = BenchmarkConfig(warmups=1, repetitions=3, output="result.csv")
-    writer = Benchmark(Context(), cfg).run_nodes(nodes, verbose=True)
-    writer.save()
+    spec = SuiteSpec(clients=("XlaFFT", "FourStep"),
+                     extents=("128x128", "1024"),
+                     select="*/float/*/Inplace_Real",
+                     warmups=1, repetitions=3, output="result.csv",
+                     verbose=True)
+    results = Session().run(spec)
     print("\naggregated (execute_forward):")
-    for row in writer.aggregate(op="execute_forward"):
+    for row in results.aggregate(op="execute_forward"):
         lib, ext, prec, kind, rigor, op, mean, sd, n = row
         print(f"  {lib:10s} {ext:>9s} {kind:14s} {mean:8.3f} ms ± {sd:.3f}")
     print("\nfull per-op rows written to result.csv")
+    spec.save("quickstart.toml")
+    print("spec saved: replay with  python -m repro.core.cli --config quickstart.toml")
 
 
 if __name__ == "__main__":

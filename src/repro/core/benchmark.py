@@ -16,6 +16,7 @@ aborts the suite — it is recorded and the suite CONTINUES (paper behavior).
 from __future__ import annotations
 
 import traceback
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
@@ -27,6 +28,7 @@ from .results import ResultSink, ResultWriter, Row, columns_for
 from .schedule import FFT_SCHEDULE, Runner
 from .timer import Timer
 from .tree import BenchNode
+from .wisdom import Wisdom
 
 # compile-time constants in gearshifft's cmake; options here
 DEFAULT_ERROR_BOUND = 1e-5
@@ -71,19 +73,114 @@ def roundtrip_error(x: np.ndarray, y: np.ndarray) -> float:
     return float(np.sqrt(np.sum(np.abs(d - mean) ** 2) / (n - 1)))
 
 
+def run_node(node: BenchNode, *, context: Context, config: BenchmarkConfig,
+             writer: ResultSink, plan_cache: Optional[PlanCache] = None,
+             wisdom: Optional[Wisdom] = None, verbose: bool = False) -> None:
+    """Drive one tree node through its schedule; record rows, never raise
+    (a failed config is a recorded failure, paper continue-on-error policy)."""
+    p = node.problem
+    cfg = config
+    base = dict(library=node.client_cls.title,
+                device=getattr(context, "device_kind", "?"),
+                extents="x".join(map(str, p.extents)), rank=p.rank,
+                extent_class=node.extent_class, precision=p.precision,
+                kind=p.kind, rigor=cfg.rigor.value)
+    schedule = getattr(node.client_cls, "schedule", None) or FFT_SCHEDULE
+    make_host = getattr(node.client_cls, "make_host_input", None)
+    host_in = (make_host(p, cfg.seed) if make_host is not None
+               else make_input(p, cfg.seed))
+    runner = Runner(schedule, cfg.warmups, cfg.repetitions)
+
+    def emit(rec):
+        # a warmup record carries only its cold-compile ops (negative
+        # run index marks it as outside the counted repetitions)
+        ops = (tuple(op for op, ev in rec.cache.items() if ev == "miss")
+               if rec.warmup else schedule.op_names)
+        for op in ops:
+            writer.add(Row(**base, run=rec.run, op=op,
+                           time_ms=rec.times[op],
+                           bytes=rec.nbytes.get(op, 0),
+                           plan_cache=rec.cache.get(op, "")))
+
+    def make_client():
+        return node.client_cls(p, context, rigor=cfg.rigor,
+                               wisdom=wisdom, plan_cache=plan_cache)
+
+    try:
+        _, last_out = runner.run(make_client, host_in, on_record=emit)
+        # validate AFTER the last run (paper: validated once at the end);
+        # warmup-only output is not a measured result — don't bless it
+        if cfg.repetitions <= 0 or last_out is None:
+            raise NoRunsError(
+                "no runs executed (repetitions=0 or download never ran)")
+        check = getattr(node.client_cls, "check", None)
+        if check is not None:
+            ok, msg = check(p, host_in, last_out, cfg.error_bound)
+            detail = msg or "ok"
+        else:
+            err = roundtrip_error(host_in, last_out.reshape(host_in.shape))
+            ok = err <= cfg.error_bound
+            msg = "" if ok else f"roundtrip_err={err:.3e}"
+            detail = f"err={err:.2e}"
+        writer.add(Row(**base, run=cfg.repetitions, op="validate",
+                       time_ms=0.0, bytes=0, success=bool(ok),
+                       error="" if ok else msg))
+        if verbose:
+            print(f"[{'ok' if ok else 'FAIL'}] {node.path} {detail}")
+    except NoRunsError as e:
+        # repetitions=0 / missing download: a clear report, not a
+        # misleading AttributeError from validating a None output
+        writer.add(Row(**base, run=0, op="validate", time_ms=0.0,
+                       bytes=0, success=False, error=str(e)))
+        if verbose:
+            print(f"[SKIP] {node.path}: {e}")
+    except Exception as e:  # failed config: record, continue with next node
+        writer.add(Row(**base, run=0, op="validate", time_ms=0.0,
+                       bytes=0, success=False,
+                       error=f"{type(e).__name__}: {e}"))
+        if verbose:
+            print(f"[FAIL] {node.path}: {e}")
+            traceback.print_exc()
+
+
+def run_nodes(nodes: Sequence[BenchNode], *, context: Context,
+              config: BenchmarkConfig, writer: ResultSink,
+              plan_cache: Optional[PlanCache] = None,
+              wisdom: Optional[Wisdom] = None,
+              verbose: bool = False) -> ResultSink:
+    """The suite loop: timed context create, every node, context destroy.
+
+    This is the function both entry points share — ``Session.run`` (the
+    supported API, see :mod:`repro.core.suite`) and the deprecated
+    :meth:`Benchmark.run_nodes` shim.
+    """
+    with Timer() as t_ctx:
+        context.create()
+    writer.add(Row("context", getattr(context, "device_kind", "?"),
+                   "-", 0, "-", "-", "-", "-", 0, "create_context",
+                   t_ctx.time_ms))
+    for node in nodes:
+        run_node(node, context=context, config=config, writer=writer,
+                 plan_cache=plan_cache, wisdom=wisdom, verbose=verbose)
+    context.destroy()
+    return writer
+
+
 @dataclass
 class Benchmark:
-    """Suite driver: configure(argv) + run(clients, extents...).
+    """Deprecated suite driver — use :class:`repro.core.suite.Session` with a
+    :class:`repro.core.suite.SuiteSpec` instead.
 
-    ``plan_cache`` (optional) memoizes compiled executables across runs and
-    adds a ``plan_cache`` hit/miss column to every row; with it left ``None``
-    the per-run recompile behavior and the original CSV schema are preserved
-    exactly.
+    Kept as a thin shim over :func:`run_nodes` so existing callers and tests
+    keep passing.  ``plan_cache`` (optional) memoizes compiled executables
+    across runs and adds a ``plan_cache`` hit/miss column to every row; with
+    it left ``None`` the per-run recompile behavior and the original CSV
+    schema are preserved exactly.
     """
 
     context: Context
     config: BenchmarkConfig = field(default_factory=BenchmarkConfig)
-    writer: ResultSink = None
+    writer: Optional[ResultSink] = None
     plan_cache: Optional[PlanCache] = None
 
     def __post_init__(self):
@@ -92,80 +189,13 @@ class Benchmark:
                 self.config.output,
                 columns=columns_for(self.plan_cache is not None))
 
-    def run_nodes(self, nodes: Sequence[BenchNode], wisdom=None,
+    def run_nodes(self, nodes: Sequence[BenchNode],
+                  wisdom: Optional[Wisdom] = None,
                   verbose: bool = False) -> ResultSink:
-        with Timer() as t_ctx:
-            self.context.create()
-        self.writer.add(Row("context", getattr(self.context, "device_kind", "?"),
-                            "-", 0, "-", "-", "-", "-", 0, "create_context",
-                            t_ctx.time_ms))
-        for node in nodes:
-            self._run_node(node, wisdom, verbose)
-        self.context.destroy()
-        return self.writer
-
-    # ------------------------------------------------------------------
-    def _run_node(self, node: BenchNode, wisdom, verbose: bool) -> None:
-        p = node.problem
-        cfg = self.config
-        base = dict(library=node.client_cls.title,
-                    device=getattr(self.context, "device_kind", "?"),
-                    extents="x".join(map(str, p.extents)), rank=p.rank,
-                    extent_class=node.extent_class, precision=p.precision,
-                    kind=p.kind, rigor=cfg.rigor.value)
-        schedule = getattr(node.client_cls, "schedule", None) or FFT_SCHEDULE
-        make_host = getattr(node.client_cls, "make_host_input", None)
-        host_in = (make_host(p, cfg.seed) if make_host is not None
-                   else make_input(p, cfg.seed))
-        runner = Runner(schedule, cfg.warmups, cfg.repetitions)
-
-        def emit(rec):
-            # a warmup record carries only its cold-compile ops (negative
-            # run index marks it as outside the counted repetitions)
-            ops = (tuple(op for op, ev in rec.cache.items() if ev == "miss")
-                   if rec.warmup else schedule.op_names)
-            for op in ops:
-                self.writer.add(Row(**base, run=rec.run, op=op,
-                                    time_ms=rec.times[op],
-                                    bytes=rec.nbytes.get(op, 0),
-                                    plan_cache=rec.cache.get(op, "")))
-
-        def make_client():
-            return node.client_cls(p, self.context, rigor=cfg.rigor,
-                                   wisdom=wisdom, plan_cache=self.plan_cache)
-
-        try:
-            _, last_out = runner.run(make_client, host_in, on_record=emit)
-            # validate AFTER the last run (paper: validated once at the end);
-            # warmup-only output is not a measured result — don't bless it
-            if cfg.repetitions <= 0 or last_out is None:
-                raise NoRunsError(
-                    "no runs executed (repetitions=0 or download never ran)")
-            check = getattr(node.client_cls, "check", None)
-            if check is not None:
-                ok, msg = check(p, host_in, last_out, cfg.error_bound)
-                detail = msg or "ok"
-            else:
-                err = roundtrip_error(host_in, last_out.reshape(host_in.shape))
-                ok = err <= cfg.error_bound
-                msg = "" if ok else f"roundtrip_err={err:.3e}"
-                detail = f"err={err:.2e}"
-            self.writer.add(Row(**base, run=cfg.repetitions, op="validate",
-                                time_ms=0.0, bytes=0, success=bool(ok),
-                                error="" if ok else msg))
-            if verbose:
-                print(f"[{'ok' if ok else 'FAIL'}] {node.path} {detail}")
-        except NoRunsError as e:
-            # repetitions=0 / missing download: a clear report, not a
-            # misleading AttributeError from validating a None output
-            self.writer.add(Row(**base, run=0, op="validate", time_ms=0.0,
-                                bytes=0, success=False, error=str(e)))
-            if verbose:
-                print(f"[SKIP] {node.path}: {e}")
-        except Exception as e:  # failed config: record, continue with next node
-            self.writer.add(Row(**base, run=0, op="validate", time_ms=0.0,
-                                bytes=0, success=False,
-                                error=f"{type(e).__name__}: {e}"))
-            if verbose:
-                print(f"[FAIL] {node.path}: {e}")
-                traceback.print_exc()
+        warnings.warn(
+            "Benchmark.run_nodes is deprecated; build a SuiteSpec and run it "
+            "through repro.core.suite.Session (or run_suite)",
+            DeprecationWarning, stacklevel=2)
+        return run_nodes(nodes, context=self.context, config=self.config,
+                         writer=self.writer, plan_cache=self.plan_cache,
+                         wisdom=wisdom, verbose=verbose)

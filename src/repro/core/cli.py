@@ -1,4 +1,4 @@
-"""gearshifft-style CLI.
+"""gearshifft-style CLI — a thin adapter from argparse to :class:`SuiteSpec`.
 
     python -m repro.core.cli -e 128x128 1024 -r '*/float/*/Inplace_Real' \
         --client XlaFFT --rigor measure -o result.csv
@@ -7,12 +7,24 @@ reproduces `gearshifft_clfft -e 128x128 1024 -r */float/*/Inplace_Real -d cpu`.
 One process can host several "library binaries" (clients); selecting a single
 client mimics the per-library executables gearshifft builds.
 
+Every invocation is parsed into one serializable
+:class:`repro.core.suite.SuiteSpec` and executed by a
+:class:`repro.core.suite.Session` — the same path the benchmark tables and
+programmatic users take.  Two flags expose the spec itself:
+
+* ``--config suite.toml`` loads a spec file (TOML, or JSON by extension) —
+  gearshifft's ``-f extents_file`` analogue; any explicitly passed CLI flag
+  overrides the file's value.
+* ``--dump-config [path|-]`` emits the fully resolved spec of this
+  invocation (TOML, or JSON for ``*.json``) and exits without running, so
+  any CLI run can be saved, replayed with ``--config``, and diffed.
+
 Clients come from the registry (populated by ``repro.core.clients.*`` at
-import; extra modules can be pulled in with ``--load pkg.mod``), results
-stream through a CSV or JSONL sink (chosen by ``--format`` or the output
-extension), and the plan/executable cache is on by default — disable it with
-``--no-plan-cache`` to restore the paper's per-run recompile measurement and
-the original CSV schema.
+import; extra modules can be pulled in with ``--load pkg.mod`` or the spec's
+``load`` list), results stream through a CSV or JSONL sink (chosen by
+``--format`` or the output extension), and the plan/executable cache is on by
+default — disable it with ``--no-plan-cache`` to restore the paper's per-run
+recompile measurement and the original CSV schema.
 """
 
 from __future__ import annotations
@@ -21,14 +33,10 @@ import argparse
 import importlib
 from typing import Sequence
 
-from .benchmark import Benchmark, BenchmarkConfig
-from .client import KINDS, PRECISIONS, Context
-from .extents import parse_extents
-from .plan import PlanCache, PlanRigor
-from .registry import client_names, get_client
-from .results import columns_for, open_sink
-from .tree import build_tree, select
-from .wisdom import Wisdom
+from .client import KINDS, PRECISIONS
+from .plan import PlanRigor
+from .registry import client_names
+from .suite import Session, SuiteSpec
 from .clients import jax_fft, dist_fft  # noqa: F401  (populate the registry)
 
 
@@ -58,45 +66,95 @@ def build_parser() -> argparse.ArgumentParser:
                    help="result sink format (default: by output extension)")
     p.add_argument("-b", "--batch", type=int, default=1)
     p.add_argument("-v", "--verbose", action="store_true")
+    p.add_argument("--config", default=None, metavar="SPEC",
+                   help="load a SuiteSpec file (.toml/.json); explicitly "
+                        "passed flags override its values")
+    p.add_argument("--dump-config", nargs="?", const="-", default=None,
+                   metavar="PATH",
+                   help="emit the resolved spec (TOML, or JSON for *.json; "
+                        "'-' = stdout) and exit without running")
     return p
 
 
+#: argparse dest -> SuiteSpec field (``no_plan_cache`` is handled separately
+#: because its sense is inverted).
+_ARG_TO_FIELD = {
+    "extents": "extents", "run": "select", "client": "clients",
+    "load": "load", "kinds": "kinds", "precisions": "precisions",
+    "batch": "batch", "rigor": "rigor", "warmups": "warmups",
+    "reps": "repetitions", "error_bound": "error_bound", "wisdom": "wisdom",
+    "output": "output", "format": "format", "verbose": "verbose",
+}
+
+
+def spec_from_args(args: argparse.Namespace,
+                   only: set[str] | None = None,
+                   base: SuiteSpec | None = None) -> SuiteSpec:
+    """Map parsed args onto a SuiteSpec.
+
+    With ``base`` (a ``--config`` spec), only the arg dests named in
+    ``only`` — the flags the user explicitly passed — override the file.
+    """
+    vals = {}
+    for arg, fld in _ARG_TO_FIELD.items():
+        if only is not None and arg not in only:
+            continue
+        vals[fld] = getattr(args, arg)
+    if only is None or "no_plan_cache" in only:
+        vals["plan_cache"] = not args.no_plan_cache
+    if base is not None:
+        from dataclasses import replace
+        return replace(base, **vals)
+    return SuiteSpec(**vals)
+
+
+def _explicit_args(argv: Sequence[str] | None) -> set[str]:
+    """Dests of the flags actually present on the command line (parsed with
+    all defaults suppressed, so absent flags leave no attribute)."""
+    p = build_parser()
+    for a in p._actions:
+        a.default = argparse.SUPPRESS
+    ns, _ = p.parse_known_args(argv)
+    return set(vars(ns))
+
+
 def main(argv: Sequence[str] | None = None) -> int:
-    # --load runs before the main parse so loaded clients appear in --client
+    # --load/--config run before the main parse so the clients they register
+    # appear in --client choices
     pre = argparse.ArgumentParser(add_help=False)
     pre.add_argument("--load", nargs="*", default=[])
+    pre.add_argument("--config", default=None)
     known, _ = pre.parse_known_args(argv)
     for mod in known.load:
         importlib.import_module(mod)
+    base = None
+    if known.config:
+        base = SuiteSpec.from_file(known.config)
+        base.load_modules()
 
     args = build_parser().parse_args(argv)
-    extents = [parse_extents(e) for e in args.extents]
-    nodes = build_tree([get_client(c) for c in args.client], extents,
-                       kinds=args.kinds, precisions=args.precisions,
-                       batch=args.batch)
-    nodes = select(nodes, args.run)
+    if base is not None:
+        spec = spec_from_args(args, only=_explicit_args(argv), base=base)
+    else:
+        spec = spec_from_args(args)
+
+    if args.dump_config is not None:
+        if args.dump_config == "-":
+            print(spec.to_toml(), end="")
+        else:
+            spec.save(args.dump_config)
+            print(f"wrote spec to {args.dump_config}")
+        return 0
+
+    nodes = spec.build_nodes()
     if not nodes:
         print("no benchmarks selected")
         return 1
-    cfg = BenchmarkConfig(warmups=args.warmups, repetitions=args.reps,
-                          error_bound=args.error_bound,
-                          rigor=PlanRigor(args.rigor), output=args.output)
-    wisdom = None
-    if args.wisdom:
-        # key the store on the REAL device kind so lookups match entries
-        # pre-generated by `python -m repro.core.wisdom`
-        import jax
-        wisdom = Wisdom(args.wisdom,
-                        device_kind=jax.devices()[0].device_kind)
-    plan_cache = None if args.no_plan_cache else PlanCache()
-    sink = open_sink(args.output, fmt=args.format,
-                     columns=columns_for(plan_cache is not None))
-    bench = Benchmark(Context(), cfg, writer=sink, plan_cache=plan_cache)
-    bench.run_nodes(nodes, wisdom=wisdom, verbose=args.verbose)
-    path = sink.save()
-    print(f"wrote {sink.n_rows} rows to {path}; {sink.n_failures} failures")
-    if plan_cache is not None:
-        s = plan_cache.stats
+    result = Session().run(spec, nodes=nodes)
+    print(f"wrote {result.n_rows} rows to {result.path}; "
+          f"{result.n_failures} failures")
+    if result.plan_stats is not None:
+        s = result.plan_stats
         print(f"plan cache: {s.hits} hits, {s.misses} misses, "
               f"cold compile {s.cold_ms:.0f} ms")
     return 0

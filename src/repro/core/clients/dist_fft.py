@@ -19,6 +19,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..client import Context, FFTClient, Problem
 from ..plan import PlanCache, PlanRigor, cached_build, executable_bytes
 from ..registry import register_client
+from ..wisdom import Wisdom
 from repro.fft import distributed as dist
 
 
@@ -34,7 +35,7 @@ class DistFFT1DClient(FFTClient):
     title = "DistFFT1D"
 
     def __init__(self, problem: Problem, context: Context,
-                 rigor: PlanRigor | None = None, wisdom=None,
+                 rigor: PlanRigor | None = None, wisdom: Wisdom | None = None,
                  plan_cache: PlanCache | None = None):
         super().__init__(problem, context)
         if problem.rank != 1:

@@ -30,6 +30,7 @@ from ..client import Context, FFTClient, Problem
 from ..plan import (Candidate, Plan, PlanCache, PlanRigor, cached_build,
                     executable_bytes, make_plan)
 from ..registry import register_client
+from ..wisdom import Wisdom
 from repro.fft import bluestein, fourstep, nd, stockham
 
 
@@ -97,7 +98,7 @@ class JaxFFTClient(FFTClient):
     rigor = PlanRigor.ESTIMATE
 
     def __init__(self, problem: Problem, context: Context,
-                 rigor: PlanRigor | None = None, wisdom=None,
+                 rigor: PlanRigor | None = None, wisdom: Wisdom | None = None,
                  plan_cache: PlanCache | None = None):
         super().__init__(problem, context)
         if rigor is not None:

@@ -150,6 +150,47 @@ class JsonlSink(ResultSink):
         return self.path
 
 
+def rows_to_csv(rows, columns) -> str:
+    """Header + every row as one CSV string (shared by the buffered writer
+    and :class:`repro.core.suite.ResultSet`)."""
+    buf = io.StringIO()
+    w = csv.writer(buf)
+    w.writerow(columns)
+    for r in rows:
+        w.writerow(r.as_list(columns))
+    return buf.getvalue()
+
+
+def save_csv(path: str, rows, columns) -> str:
+    """Write ``rows_to_csv`` to ``path``, creating parent dirs."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w", newline="") as f:
+        f.write(rows_to_csv(rows, columns))
+    return path
+
+
+def aggregate_rows(rows, op: str | None = None):
+    """mean/stdev per (library, extents, precision, kind, rigor, op) over the
+    successful rows — the aggregation the paper-style figures consume.
+
+    Shared by :class:`ResultWriter` and :class:`repro.core.suite.ResultSet`.
+    """
+    groups: dict[tuple, list[float]] = {}
+    for r in rows:
+        if not r.success or (op is not None and r.op != op):
+            continue
+        key = (r.library, r.extents, r.precision, r.kind, r.rigor, r.op)
+        groups.setdefault(key, []).append(r.time_ms)
+    out = []
+    for key, vals in sorted(groups.items()):
+        mean = statistics.fmean(vals)
+        sd = statistics.stdev(vals) if len(vals) > 1 else 0.0
+        out.append((*key, mean, sd, len(vals)))
+    return out
+
+
 def open_sink(path: str, fmt: str | None = None,
               columns: list[str] | None = None) -> ResultSink:
     """Sink factory: explicit ``fmt`` ('csv'|'jsonl') or by file extension."""
@@ -182,36 +223,12 @@ class ResultWriter(ResultSink):
         self.rows.append(row)
 
     def save(self) -> str:
-        d = os.path.dirname(self.path)
-        if d:
-            os.makedirs(d, exist_ok=True)
-        with open(self.path, "w", newline="") as f:
-            w = csv.writer(f)
-            w.writerow(self.columns)
-            for r in self.rows:
-                w.writerow(r.as_list(self.columns))
-        return self.path
+        return save_csv(self.path, self.rows, self.columns)
 
     def to_csv_string(self) -> str:
-        buf = io.StringIO()
-        w = csv.writer(buf)
-        w.writerow(self.columns)
-        for r in self.rows:
-            w.writerow(r.as_list(self.columns))
-        return buf.getvalue()
+        return rows_to_csv(self.rows, self.columns)
 
     # --- aggregation for the paper-style figures ---------------------------
     def aggregate(self, op: str | None = None):
         """mean/stdev per (library, extents, precision, kind, rigor, op)."""
-        groups: dict[tuple, list[float]] = {}
-        for r in self.rows:
-            if not r.success or (op is not None and r.op != op):
-                continue
-            key = (r.library, r.extents, r.precision, r.kind, r.rigor, r.op)
-            groups.setdefault(key, []).append(r.time_ms)
-        out = []
-        for key, vals in sorted(groups.items()):
-            mean = statistics.fmean(vals)
-            sd = statistics.stdev(vals) if len(vals) > 1 else 0.0
-            out.append((*key, mean, sd, len(vals)))
-        return out
+        return aggregate_rows(self.rows, op)

@@ -1,0 +1,115 @@
+"""Extents generators + classification (paper Fig. 7 extent classes):
+powerof2/radix357/oddshape boundaries, rank handling, parse error paths,
+and the sweep_extents dispatch the SuiteSpec sweeps use."""
+
+import math
+
+import pytest
+
+from repro.core.extents import (SWEEP_CLASSES, classify, format_extents,
+                                oddshape_extents, parse_extents,
+                                powerof2_extents, radix357_extents,
+                                sweep_extents, total_elems)
+
+
+# --------------------------------------------------------------------------
+# parse_extents error paths
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("bad", ["", "x", "12x-1", "0", "1x2x3x4", "axb",
+                                 "12.5", "4x", "x32"])
+def test_parse_extents_rejects(bad):
+    with pytest.raises(ValueError, match="bad extents spec"):
+        parse_extents(bad)
+
+
+def test_parse_extents_accepts_case_and_roundtrip():
+    assert parse_extents("128X64") == (128, 64)
+    for spec in ("1", "1024", "32x32", "3x5x7"):
+        assert format_extents(parse_extents(spec)) == spec.lower()
+
+
+def test_total_elems():
+    assert total_elems((4, 8, 2)) == 64
+    assert total_elems(()) == 1 == math.prod(())
+
+
+# --------------------------------------------------------------------------
+# classify boundaries + rank handling
+# --------------------------------------------------------------------------
+def test_classify_powerof2_boundaries():
+    assert classify((1,)) == "powerof2"           # 2^0
+    assert classify((2,)) == "powerof2"
+    assert classify((1024, 2, 64)) == "powerof2"  # every axis must be pow2
+
+
+@pytest.mark.parametrize("ext", [(3,), (120,), (2, 3), (6, 10, 14), (960,)])
+def test_classify_radix357(ext):
+    assert classify(ext) == "radix357"
+
+
+@pytest.mark.parametrize("ext", [(11,), (19,), (19 * 19,), (1024, 19),
+                                 (2, 3, 23)])
+def test_classify_oddshape(ext):
+    # one non-{2,3,5,7}-smooth axis makes the whole shape oddshape
+    assert classify(ext) == "oddshape"
+
+
+# --------------------------------------------------------------------------
+# generators
+# --------------------------------------------------------------------------
+def test_powerof2_extents_values_and_rank():
+    assert list(powerof2_extents(1, 3, 5)) == [(8,), (16,), (32,)]
+    assert list(powerof2_extents(3, 4, 4)) == [(16, 16, 16)]
+    assert list(powerof2_extents(1, 5, 3)) == []   # empty range
+
+
+def test_radix357_extents_terminates_above_32():
+    # regression: the old v//8 skip for v >= 32 could step over every
+    # remaining smooth number and never reach `count` (infinite loop)
+    got = list(radix357_extents(1, count=4, start=96))
+    assert got == [(96,), (98,), (100,), (105,)]
+
+
+def test_radix357_extents_properties():
+    got = list(radix357_extents(1, count=6, start=3))
+    assert len(got) == 6
+    sizes = [e[0] for e in got]
+    assert sizes == sorted(sizes) and len(set(sizes)) == 6
+    for ext in got:
+        assert classify(ext) == "radix357"     # smooth but never pure pow2
+    # rank handling: the size repeats along every axis
+    got3 = list(radix357_extents(3, count=2, start=3))
+    assert all(len(e) == 3 and len(set(e)) == 1 for e in got3)
+
+
+def test_oddshape_extents_properties():
+    got = list(oddshape_extents(2, count=4))
+    assert len(got) == 4
+    assert got[0] == (19, 19)
+    for ext in got:
+        assert classify(ext) == "oddshape"
+    # count caps at the base list
+    assert len(list(oddshape_extents(1, count=100))) == 8
+
+
+# --------------------------------------------------------------------------
+# sweep dispatch (what SuiteSpec sweeps call)
+# --------------------------------------------------------------------------
+def test_sweep_extents_dispatch():
+    assert sweep_extents("powerof2", 1, min_exp=3, max_exp=4) == [(8,), (16,)]
+    assert sweep_extents("radix357", 1, count=3) == \
+        list(radix357_extents(1, count=3))
+    assert sweep_extents("oddshape", 3, count=2) == \
+        list(oddshape_extents(3, count=2))
+    assert set(SWEEP_CLASSES) == {"powerof2", "radix357", "oddshape"}
+
+
+def test_sweep_extents_errors():
+    with pytest.raises(ValueError, match="unknown sweep class"):
+        sweep_extents("fibonacci", 1)
+    with pytest.raises(ValueError, match="requires"):
+        sweep_extents("powerof2", 1, min_exp=3)       # max_exp missing
+    with pytest.raises(ValueError, match="does not accept"):
+        sweep_extents("oddshape", 1, start=5)         # start is radix357-only
+    with pytest.raises(ValueError, match="rank"):
+        sweep_extents("powerof2", 4, min_exp=1, max_exp=2)

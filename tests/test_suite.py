@@ -1,0 +1,295 @@
+"""SuiteSpec/Session API tests: TOML/JSON round-trips, --dump-config golden
+output, CLI-vs-spec node-tree equivalence, ResultSet helpers, and the
+Session-shared plan cache."""
+
+import csv
+import json
+
+import pytest
+
+from repro.core.client import KINDS, Problem
+from repro.core.results import COLUMNS, Row, columns_for
+from repro.core.suite import (ResultSet, Session, SuiteSpec, SweepSpec,
+                              run_suite)
+from repro.core.tree import build_tree, select
+from repro.core.clients import jax_fft as jf
+
+
+# --------------------------------------------------------------------------
+# spec construction + validation
+# --------------------------------------------------------------------------
+def test_spec_normalizes_extents_forms():
+    s = SuiteSpec(extents=("128x64", 1024, (32, 32)))
+    assert s.extents == ((128, 64), (1024,), (32, 32))
+
+
+def test_spec_validation_errors():
+    with pytest.raises(ValueError, match="unknown kind"):
+        SuiteSpec(kinds=("Sideways_Real",))
+    with pytest.raises(ValueError, match="unknown precision"):
+        SuiteSpec(precisions=("half",))
+    with pytest.raises(ValueError, match="unknown rigor"):
+        SuiteSpec(rigor="vibes")
+    with pytest.raises(ValueError, match="batch"):
+        SuiteSpec(batch=0)
+    with pytest.raises(ValueError, match="unknown format"):
+        SuiteSpec(format="xml")
+    with pytest.raises(ValueError, match="unknown sweep class"):
+        SweepSpec("fibonacci")
+    with pytest.raises(ValueError, match="requires"):
+        SweepSpec("powerof2", min_exp=3)   # max_exp missing: eager failure
+
+
+def test_spec_resolved_extents_explicit_plus_sweeps():
+    s = SuiteSpec(extents=("100",),
+                  sweeps=(SweepSpec("powerof2", rank=1, min_exp=3, max_exp=4),
+                          SweepSpec("oddshape", rank=1, count=1)))
+    assert s.resolved_extents() == ((100,), (8,), (16,), (19,))
+
+
+def test_spec_build_nodes_requires_extents():
+    with pytest.raises(ValueError, match="resolves no extents"):
+        SuiteSpec(extents=()).build_nodes()
+
+
+# --------------------------------------------------------------------------
+# serialization round-trips
+# --------------------------------------------------------------------------
+FULL_SPEC = SuiteSpec(
+    clients=("XlaFFT", "Stockham"), load=(),
+    extents=("64", "32x32"),
+    sweeps=(SweepSpec("powerof2", rank=3, min_exp=3, max_exp=5),
+            SweepSpec("radix357", rank=1, count=4, start=96)),
+    kinds=("Outplace_Real", "Inplace_Complex"), precisions=("float",),
+    batch=2, select="*/float/*/Outplace_Real", rigor="measure",
+    warmups=2, repetitions=4, error_bound=1e-4, seed=7,
+    plan_cache=False, wisdom="w.json", output="out.jsonl", format="jsonl",
+    verbose=True)
+
+
+def test_toml_roundtrip_equality():
+    assert SuiteSpec.from_toml(FULL_SPEC.to_toml()) == FULL_SPEC
+    # defaults round-trip too (None fields omitted from the file)
+    d = SuiteSpec(extents=("16",))
+    assert SuiteSpec.from_toml(d.to_toml()) == d
+    assert "select" not in d.to_toml() and "wisdom" not in d.to_toml()
+
+
+def test_json_roundtrip_equality():
+    assert SuiteSpec.from_json(FULL_SPEC.to_json()) == FULL_SPEC
+    # json and toml describe the identical dict
+    assert json.loads(FULL_SPEC.to_json()) == FULL_SPEC.to_dict()
+
+
+def test_file_roundtrip_by_extension(tmp_path):
+    t = str(tmp_path / "s.toml")
+    j = str(tmp_path / "s.json")
+    FULL_SPEC.save(t)
+    FULL_SPEC.save(j)
+    assert SuiteSpec.from_file(t) == SuiteSpec.from_file(j) == FULL_SPEC
+    assert open(j).read().lstrip().startswith("{")
+
+
+def test_from_dict_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="unknown SuiteSpec key"):
+        SuiteSpec.from_dict({"extents": ["64"], "repititions": 3})
+    with pytest.raises(ValueError, match="unknown sweep key"):
+        SuiteSpec.from_dict({"sweep": [{"class": "oddshape", "depth": 2}]})
+    with pytest.raises(ValueError, match="missing 'class'"):
+        SuiteSpec.from_dict({"sweep": [{"rank": 1}]})
+
+
+# --------------------------------------------------------------------------
+# CLI adapter: argv -> spec -> identical node tree
+# --------------------------------------------------------------------------
+def test_cli_and_spec_produce_identical_node_trees():
+    from repro.core.cli import build_parser, spec_from_args
+    argv = ["-e", "64", "16x16", "--client", "XlaFFT", "Stockham",
+            "--kinds", "Outplace_Real", "Inplace_Complex",
+            "--precisions", "float", "-r", "*/float/*/Outplace_Real",
+            "-b", "2"]
+    spec = spec_from_args(build_parser().parse_args(argv))
+    expected = select(
+        build_tree([jf.XlaFFTClient, jf.StockhamClient], [(64,), (16, 16)],
+                   kinds=("Outplace_Real", "Inplace_Complex"),
+                   precisions=("float",), batch=2),
+        "*/float/*/Outplace_Real")
+    assert spec.build_nodes() == expected
+
+
+def test_cli_defaults_map_to_spec_defaults():
+    from repro.core.cli import build_parser, spec_from_args
+    spec = spec_from_args(build_parser().parse_args([]))
+    assert spec.clients == ("XlaFFT",)
+    assert spec.extents == ((32, 32, 32),)
+    assert spec.kinds == KINDS and spec.precisions == ("float",)
+    assert spec.plan_cache is True and spec.select is None
+
+
+def test_dump_config_golden(capsys):
+    from repro.core.cli import main
+    rc = main(["-e", "64", "--kinds", "Outplace_Real", "--precisions",
+               "float", "--reps", "2", "--warmups", "0", "--dump-config"])
+    assert rc == 0
+    golden = """\
+clients = ["XlaFFT"]
+extents = ["64"]
+kinds = ["Outplace_Real"]
+precisions = ["float"]
+batch = 1
+rigor = "estimate"
+warmups = 0
+repetitions = 2
+error_bound = 1e-05
+seed = 2017
+plan_cache = true
+verbose = false
+output = "result.csv"
+"""
+    assert capsys.readouterr().out == golden
+
+
+def test_dump_config_config_roundtrip_runs_identically(tmp_path):
+    """--dump-config → --config replays the CLI invocation: same spec, same
+    node tree, same CSV schema."""
+    from repro.core.cli import build_parser, main, spec_from_args
+    argv = ["-e", "16", "--client", "XlaFFT", "--kinds", "Outplace_Real",
+            "--precisions", "float", "--reps", "1", "--warmups", "0"]
+    spath = str(tmp_path / "spec.toml")
+    assert main(argv + ["--dump-config", spath]) == 0
+
+    replayed = SuiteSpec.from_file(spath)
+    direct = spec_from_args(build_parser().parse_args(argv))
+    assert replayed == direct
+    assert replayed.build_nodes() == direct.build_nodes()
+
+    out_a = str(tmp_path / "a.csv")
+    out_b = str(tmp_path / "b.csv")
+    assert main(argv + ["-o", out_a]) == 0
+    assert main(["--config", spath, "-o", out_b]) == 0
+    with open(out_a) as fa, open(out_b) as fb:
+        assert fa.readline() == fb.readline()    # identical CSV schema
+
+
+def test_config_with_explicit_flag_override(tmp_path, capsys):
+    from repro.core.cli import main
+    spath = str(tmp_path / "spec.toml")
+    SuiteSpec(extents=("64",), repetitions=5, warmups=3,
+              kinds=("Outplace_Real",)).save(spath)
+    rc = main(["--config", spath, "--reps", "1", "--dump-config", "-"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "repetitions = 1" in out      # explicit flag wins
+    assert "warmups = 3" in out          # file value kept
+    assert 'extents = ["64"]' in out
+
+
+def test_cli_config_end_to_end(tmp_path):
+    from repro.core.cli import main
+    spath = str(tmp_path / "spec.toml")
+    out = str(tmp_path / "r.csv")
+    SuiteSpec(clients=("XlaFFT",), extents=("16",), kinds=("Outplace_Real",),
+              precisions=("float",), warmups=0, repetitions=1,
+              output=out).save(spath)
+    assert main(["--config", spath]) == 0
+    rows = list(csv.DictReader(open(out)))
+    assert any(r["op"] == "execute_forward" for r in rows)
+    assert all(r["success"] == "True" for r in rows if r["op"] == "validate")
+
+
+# --------------------------------------------------------------------------
+# ResultSet
+# --------------------------------------------------------------------------
+def _rows():
+    return [Row("lib", "cpu", "64", 1, "powerof2", "float", "Outplace_Real",
+                "estimate", i, "execute_forward", 2.0, 64, True, "")
+            for i in range(3)] + \
+           [Row("lib", "cpu", "64", 1, "powerof2", "float", "Outplace_Real",
+                "estimate", 0, "validate", 0.0, 0, False, "boom")]
+
+
+def test_result_set_query_and_counts():
+    rs = ResultSet(_rows(), COLUMNS)
+    assert len(rs) == rs.n_rows == 4 and rs.n_failures == 1
+    assert len(rs.query(op="execute_forward")) == 3
+    assert rs.query(op="execute_forward", run=2)[0].run == 2
+    assert rs.failures()[0].error == "boom"
+
+
+def test_result_set_aggregate_matches_result_writer():
+    from repro.core.results import ResultWriter
+    w = ResultWriter("unused.csv")
+    rs = ResultSet(_rows(), COLUMNS)
+    for r in _rows():
+        w.add(r)
+    assert rs.aggregate(op="execute_forward") == \
+        w.aggregate(op="execute_forward")
+    (lib, ext, prec, kind, rg, op, mean, sd, n) = rs.aggregate()[0]
+    assert (lib, op, mean, n) == ("lib", "execute_forward", 2.0, 3)
+
+
+def test_result_set_concat_and_save(tmp_path):
+    a = ResultSet(_rows(), COLUMNS)
+    b = ResultSet(_rows(), COLUMNS)
+    both = ResultSet.concat([a, b])
+    assert both.n_rows == 8 and both.n_failures == 2
+    path = both.save(str(tmp_path / "all.csv"))
+    data = list(csv.DictReader(open(path)))
+    assert len(data) == 8 and data[0]["library"] == "lib"
+    with pytest.raises(ValueError, match="different columns"):
+        ResultSet.concat([a, ResultSet(_rows(), columns_for(True))])
+
+
+# --------------------------------------------------------------------------
+# Session
+# --------------------------------------------------------------------------
+TINY = SuiteSpec(clients=("XlaFFT",), extents=("16",),
+                 kinds=("Outplace_Real",), precisions=("float",),
+                 warmups=0, repetitions=1, output=None)
+
+
+def test_session_run_in_memory_only():
+    rs = run_suite(TINY)
+    assert rs.path is None and rs.n_rows > 0
+    assert rs.query(op="validate")[0].success
+    assert rs.columns == columns_for(True)       # plan cache on by default
+    assert rs.plan_stats is not None and rs.plan_stats.misses == 2
+
+
+def test_session_shares_plan_cache_across_runs():
+    session = Session()
+    r1 = session.run(TINY)
+    assert r1.plan_stats.misses == 2            # forward + inverse compiled
+    r2 = session.run(TINY)
+    assert r2.plan_stats.misses == 2            # nothing new compiled
+    assert r2.query(op="init_forward")[0].plan_cache == "hit"
+
+
+def test_session_no_plan_cache_restores_seed_schema(tmp_path):
+    out = str(tmp_path / "s.csv")
+    from dataclasses import replace
+    rs = run_suite(replace(TINY, plan_cache=False, output=out))
+    assert rs.columns == list(COLUMNS)
+    with open(out) as f:
+        assert f.readline().strip() == ",".join(COLUMNS)
+    assert rs.path == out
+
+
+def test_session_streams_to_file_and_memory(tmp_path):
+    out = str(tmp_path / "s.jsonl")
+    from dataclasses import replace
+    rs = run_suite(replace(TINY, output=out))
+    lines = [json.loads(line) for line in open(out)]
+    assert len(lines) == rs.n_rows               # same rows in both places
+    assert lines[-1]["op"] == rs.rows[-1].op
+
+
+def test_session_runs_sweep_spec():
+    spec = SuiteSpec(clients=("XlaFFT",),
+                     sweeps=(SweepSpec("powerof2", rank=1,
+                                       min_exp=3, max_exp=4),),
+                     kinds=("Outplace_Real",), precisions=("float",),
+                     warmups=0, repetitions=1, output=None)
+    rs = run_suite(spec)
+    assert {r.extents for r in rs.query(op="validate")} == {"8", "16"}
+    assert all(r.success for r in rs.query(op="validate"))
