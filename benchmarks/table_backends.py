@@ -1,7 +1,8 @@
 """Paper Fig. 6: FFT-only runtime per backend, 1D and 3D — the
 CPU-vs-GPU-library comparison mapped onto our backend set (xla = vendor
 library, fourstep = MXU formulation, stockham = butterfly baseline,
-fourstep_pallas = fused kernel in interpret mode off-TPU)."""
+stockham_pallas = fused in-VMEM Stockham kernel, sixstep = composed
+large-N kernel path; Pallas kernels run in interpret mode off-TPU)."""
 
 from __future__ import annotations
 
@@ -12,11 +13,13 @@ from .common import emit, run_suite
 
 # plan_cache=False preserves the paper's per-run recompile measurement
 SPECS = {
-    "1d": SuiteSpec(clients=("XlaFFT", "Stockham", "FourStep", "Bluestein"),
+    "1d": SuiteSpec(clients=("XlaFFT", "Stockham", "FourStep", "Bluestein",
+                             "StockhamPallas", "SixStep"),
                     extents=("256", "4096", "65536"),
                     kinds=("Outplace_Real",), precisions=("float",),
                     warmups=1, plan_cache=False, output=None),
-    "3d": SuiteSpec(clients=("XlaFFT", "Stockham", "FourStep", "Bluestein"),
+    "3d": SuiteSpec(clients=("XlaFFT", "Stockham", "FourStep", "Bluestein",
+                             "StockhamPallas"),
                     extents=("16x16x16", "32x32x32"),
                     kinds=("Outplace_Real",), precisions=("float",),
                     warmups=1, plan_cache=False, output=None),

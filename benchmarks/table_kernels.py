@@ -104,6 +104,32 @@ class FourStepJnpKernel(KernelClient):
         return fourstep.fft(x)
 
 
+@register_client()
+class StockhamPallasKernel(KernelClient):
+    title = "KernelStockhamPallasInterp"
+
+    @classmethod
+    def make_host_input(cls, problem: Problem, seed: int):
+        return (rand_complex((problem.batch, problem.extents[0]), seed=seed),)
+
+    def _call(self, x):
+        from repro.kernels.stockham_pallas import ops as sp_ops
+        return sp_ops.fft(x, interpret=True)
+
+
+@register_client()
+class StockhamJnpKernel(KernelClient):
+    title = "KernelStockhamJnp"
+
+    @classmethod
+    def make_host_input(cls, problem: Problem, seed: int):
+        return (rand_complex((problem.batch, problem.extents[0]), seed=seed),)
+
+    def _call(self, x):
+        from repro.fft import stockham
+        return stockham.fft(x)
+
+
 # fused-vs-unfused fftconv workload: c channels, b batch, length L, taps K
 C, B, K = 4, 4, 64
 
@@ -145,7 +171,8 @@ class FftconvUnfusedKernel(KernelClient):
 
 
 SPECS = (
-    SuiteSpec(clients=("KernelFft4StepInterp", "KernelFourStepJnp"),
+    SuiteSpec(clients=("KernelFft4StepInterp", "KernelFourStepJnp",
+                       "KernelStockhamPallasInterp", "KernelStockhamJnp"),
               extents=("4096",), batch=8,
               kinds=("Outplace_Complex",), precisions=("float",),
               warmups=2, plan_cache=False, output=None),
@@ -159,6 +186,8 @@ SPECS = (
 NAMES = {
     "KernelFft4StepInterp": "kernel/fft4step_interp/4096x8",
     "KernelFourStepJnp": "kernel/fourstep_jnp/4096x8",
+    "KernelStockhamPallasInterp": "kernel/stockham_pallas_interp/4096x8",
+    "KernelStockhamJnp": "kernel/stockham_jnp/4096x8",
     "KernelFftconvFused": "kernel/fftconv_fused_interp/2048",
     "KernelFftconvUnfused": "kernel/fftconv_unfused_xla/2048",
 }

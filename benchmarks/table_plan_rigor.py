@@ -29,8 +29,12 @@ def run(reps: int = 3) -> None:
         generate(exts, wpath, rigor=PlanRigor.MEASURE, kinds=("Inplace_Real",))
         for rigor in (PlanRigor.ESTIMATE, PlanRigor.MEASURE,
                       PlanRigor.WISDOM_ONLY):
+            # wisdom only for the WISDOM_ONLY column: MEASURE with wisdom
+            # attached would short-circuit the sweep (fftw semantics) and
+            # report wisdom-lookup time instead of the honest Fig. 4-5 cost
             spec = replace(SPEC, repetitions=reps, rigor=rigor.value,
-                           wisdom=wpath)
+                           wisdom=wpath if rigor is PlanRigor.WISDOM_ONLY
+                           else None)
             results = run_suite(spec)
             for (lib, ext, prec, kind, rg, op, mean, sd, n) in \
                     results.aggregate(op="init_forward"):

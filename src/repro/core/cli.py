@@ -153,6 +153,9 @@ def main(argv: Sequence[str] | None = None) -> int:
     result = Session().run(spec, nodes=nodes)
     print(f"wrote {result.n_rows} rows to {result.path}; "
           f"{result.n_failures} failures")
+    summ = result.summary()
+    print(f"plan time: {summ['plan_time_ms']:.0f} ms total "
+          f"({summ['plan_time_cold_ms']:.0f} ms cold compile)")
     if result.plan_stats is not None:
         s = result.plan_stats
         print(f"plan cache: {s.hits} hits, {s.misses} misses, "

@@ -5,7 +5,13 @@ Backend map (DESIGN.md §2):
   xla              XLA's native FFT HLO ("vendor library")
   stockham         pure-jnp Stockham autosort (radix-2 butterfly baseline)
   fourstep         matmul-DFT four-step (MXU formulation, jnp)
-  fourstep_pallas  the fused Pallas kernel path (interpret=True off-TPU)
+  fourstep_pallas  fused four-step Pallas kernel, n <= 16384 (interpret off-TPU)
+  stockham_pallas  fused multi-stage Stockham Pallas kernel: every radix
+                   stage on a VMEM-resident batch tile, one HBM touch
+                   (knobs: tile_b, radix)
+  sixstep          large-N path composing stockham_pallas residual
+                   transforms with the fused four-step kernel
+                   (knobs: split_n1, tile_b)
   dft              direct matmul DFT Pallas kernel (tiny extents)
   bluestein        chirp-Z (any size)
 
@@ -53,6 +59,24 @@ def _engine(cand: Candidate) -> Callable:
         interp = not _on_tpu()
         return lambda x, inverse=False: fs_ops.fft(x, inverse=inverse,
                                                    tile_b=tile_b, interpret=interp)
+    if b == "stockham_pallas":
+        from repro.kernels.stockham_pallas import ops as sp_ops
+        opts = cand.opts()
+        tile_b = opts.get("tile_b")
+        radix = opts.get("radix", 8)
+        interp = not _on_tpu()
+        return lambda x, inverse=False: sp_ops.fft(x, inverse=inverse,
+                                                   tile_b=tile_b, radix=radix,
+                                                   interpret=interp)
+    if b == "sixstep":
+        from repro.fft import sixstep
+        opts = cand.opts()
+        split_n1 = opts.get("split_n1")
+        tile_b = opts.get("tile_b")
+        interp = not _on_tpu()
+        return lambda x, inverse=False: sixstep.fft(x, inverse=inverse,
+                                                    n1=split_n1, tile_b=tile_b,
+                                                    interpret=interp)
     if b == "dft":
         from repro.kernels.dft_matmul import ops as dft_ops
         interp = not _on_tpu()
@@ -159,13 +183,27 @@ class JaxFFTClient(FFTClient):
         if self.backend_filter is None:
             return make_plan(self.problem, self.rigor, build=build,
                              wisdom=self.wisdom)
-        # library-pinned client: planner searches only this backend's knobs
+        # library-pinned client: planner searches only this backend's knobs.
+        # Wisdom entries are scoped by the backend so per-library tuning
+        # persists without clobbering the open planner's choices.
         t0 = _time.perf_counter()
+        measured = self.rigor in (PlanRigor.MEASURE, PlanRigor.PATIENT)
+        if (measured or self.rigor is PlanRigor.WISDOM_ONLY) \
+                and self.wisdom is not None:
+            cand = self.wisdom.lookup(self.problem, scope=self.backend_filter)
+            if cand is not None and cand.backend == self.backend_filter:
+                return Plan(self.problem, cand, self.rigor,
+                            (_time.perf_counter() - t0) * 1e3)
+        if self.rigor is PlanRigor.WISDOM_ONLY:
+            return None   # fftw NULL plan: no persisted selection, no sweep
         cands = [c for c in candidates(self.problem,
                                        patient=(self.rigor is PlanRigor.PATIENT))
                  if c.backend == self.backend_filter] or [Candidate(self.backend_filter)]
-        if self.rigor in (PlanRigor.MEASURE, PlanRigor.PATIENT) and len(cands) > 1:
+        if measured and len(cands) > 1:
             cand, timings = measure_plan(self.problem, build, cands)
+            if self.wisdom is not None:   # persist the tuned knobs
+                self.wisdom.record(self.problem, cand,
+                                   scope=self.backend_filter)
         else:
             cand, timings = cands[0], {}
         return Plan(self.problem, cand, self.rigor,
@@ -270,6 +308,18 @@ class FourStepClient(JaxFFTClient):
 class FourStepPallasClient(JaxFFTClient):
     title = "FourStepPallas"
     backend_filter = "fourstep_pallas"
+
+
+@register_client()
+class StockhamPallasClient(JaxFFTClient):
+    title = "StockhamPallas"
+    backend_filter = "stockham_pallas"
+
+
+@register_client()
+class SixStepClient(JaxFFTClient):
+    title = "SixStep"
+    backend_filter = "sixstep"
 
 
 @register_client()

@@ -173,12 +173,23 @@ def _smooth(n: int) -> bool:
     return n == 1
 
 
+#: Feasibility caps for the fused kernel paths (see the kernel modules).
+FOURSTEP_PALLAS_MAX_N = 128 * 128        # one fused four-step kernel pass
+STOCKHAM_PALLAS_MAX_N = 1 << 20          # ops.MAX_N: single-kernel hard cap
+STOCKHAM_PALLAS_VMEM_N = 1 << 15         # fits a useful batch tile in VMEM
+SIXSTEP_MIN_N, SIXSTEP_MAX_N = 4, 1 << 24
+
+
 def candidates(problem: Problem, patient: bool = False) -> list[Candidate]:
     """Enumerate feasible (backend, knob) combinations for a problem.
 
     Backends transform the innermost extent; outer extents are batched via
     nd-application, so feasibility is decided per-axis (all axes must be
-    supported by the backend).
+    supported by the backend).  ``patient=True`` widens the space with the
+    fused kernels' tunable knobs — fourstep_pallas/stockham_pallas batch
+    tiles, the Stockham radix schedule, and the six-step n1*n2 split — the
+    FFTW_PATIENT analogue of searching algorithm *and* implementation
+    parameters.
     """
     exts = problem.extents
     out: list[Candidate] = [Candidate("xla")]
@@ -190,20 +201,51 @@ def candidates(problem: Problem, patient: bool = False) -> list[Candidate]:
         out.append(Candidate("dft"))
     if all(_kernel_factorable(v) for v in exts):
         out.append(Candidate("fourstep_pallas"))
+    if all(_pow2(v) and v <= STOCKHAM_PALLAS_MAX_N for v in exts):
+        out.append(Candidate("stockham_pallas"))
+    if all(_pow2(v) and SIXSTEP_MIN_N <= v <= SIXSTEP_MAX_N for v in exts):
+        out.append(Candidate("sixstep"))
     out.append(Candidate("bluestein"))  # always feasible
     if patient:
         extra = []
         for c in out:
+            if c.options:
+                continue
             if c.backend == "fourstep_pallas":
                 for tb in (4, 8, 16):
                     extra.append(Candidate("fourstep_pallas", (("tile_b", tb),)))
+            elif c.backend == "stockham_pallas":
+                for tb in (4, 16):
+                    for radix in (4, 8):
+                        extra.append(Candidate(
+                            "stockham_pallas",
+                            (("radix", radix), ("tile_b", tb))))
+            elif c.backend == "sixstep":
+                for n1 in _sixstep_splits(exts[-1]):
+                    extra.append(Candidate("sixstep", (("split_n1", n1),)))
+                extra.append(Candidate("sixstep", (("tile_b", 16),)))
         out += extra
     return out
 
 
+def _sixstep_splits(n: int) -> list[int]:
+    """Alternative n = n1*n2 residual splits for the PATIENT sweep: the
+    balanced split and a residual-heavy one, besides the default.  Both
+    sixstep.choose_split constraints apply — n1 <= 2^10 (the residual
+    VMEM cap) and n2 <= 2^14 — so every emitted knob is one the engine
+    actually honors rather than silently replacing with the default."""
+    if not _pow2(n) or n < SIXSTEP_MIN_N:
+        return []
+    k = n.bit_length() - 1
+    default_k1 = k - min(14, k - 1)
+    opts = {max(1, k // 2), max(1, min(10, k - 1))} - {default_k1}
+    return sorted(1 << k1 for k1 in opts
+                  if 1 <= k1 <= 10 and k - k1 <= 14)
+
+
 def _kernel_factorable(n: int) -> bool:
     """n = n1*n2 with both <= 128 (single fused fft4step kernel pass)."""
-    if n > 128 * 128:
+    if n > FOURSTEP_PALLAS_MAX_N:
         return False
     for n1 in range(min(128, n), 0, -1):
         if n % n1 == 0 and n // n1 <= 128:
@@ -211,20 +253,84 @@ def _kernel_factorable(n: int) -> bool:
     return False
 
 
-def estimate_choice(problem: Problem) -> Candidate:
-    """The ESTIMATE heuristic: a static cost model.
+# ---------------------------------------------------------------------------
+# ESTIMATE cost model: modeled HBM traffic per backend
+# ---------------------------------------------------------------------------
+def hbm_passes(backend: str, n: int) -> float:
+    """Modeled HBM round-trips of the whole signal for one length-n
+    transform (the quantity that dominates above the paper's ~1 MiB
+    boundary).  ``inf`` marks an infeasible / VMEM-overflowing choice.
 
-    Mirrors fftw's 'probably sub-optimal but instant' behavior: prefer the
-    vendor path (XLA HLO) for large/smooth problems, the matmul paths for
-    small ones, bluestein only when nothing else fits.
+    The fused kernels are the reason this model exists: stockham_pallas and
+    fourstep_pallas read and write the signal exactly once, the six-step
+    composition a small constant (2 kernel passes + 3 transposes), while
+    the staged jnp Stockham pays one pass per radix-2 stage.
     """
-    cands = {c.backend: c for c in candidates(problem)}
+    inf = float("inf")
+    if backend == "xla":
+        return 2.0      # vendor path: multi-stage but heavily fused
+    if backend == "stockham":
+        return float(max(1, n.bit_length() - 1))   # one pass per stage
+    if backend == "fourstep":
+        levels = 1
+        m = n
+        while m > 128:
+            m = -(-m // 128)
+            levels += 1
+        return 2.0 * levels
+    if backend == "dft":
+        return 1.0 if n <= 128 else inf
+    if backend == "fourstep_pallas":
+        return 1.0 if _kernel_factorable(n) else inf
+    if backend == "stockham_pallas":
+        # beyond the VMEM tile budget the kernel can't hold a batch row
+        return 1.0 if _pow2(n) and n <= STOCKHAM_PALLAS_VMEM_N else inf
+    if backend == "sixstep":
+        if _pow2(n) and SIXSTEP_MIN_N <= n <= SIXSTEP_MAX_N:
+            return 5.0  # 2 fused kernel passes + 3 transpose passes
+        return inf
+    if backend == "bluestein":
+        m = 1
+        while m < 2 * n - 1:
+            m *= 2
+        # 3 staged Stockham transforms of padded length m, + chirp setup
+        return (3.0 * max(1, m.bit_length() - 1) + 2.0) * (m / n)
+    return inf
+
+
+def estimate_bytes_moved(problem: Problem, cand: Candidate) -> float:
+    """Modeled HBM bytes for the full nd transform under ``cand``: each
+    transformed axis moves the whole (complex) signal ``hbm_passes`` times,
+    twice per pass (read + write)."""
+    complex_bytes = problem.n_elems * (16 if problem.precision == "double" else 8)
+    total = 0.0
+    for ext in problem.extents:
+        total += hbm_passes(cand.backend, ext) * 2.0 * complex_bytes
+    return total
+
+
+def estimate_choice(problem: Problem) -> Candidate:
+    """The ESTIMATE heuristic: a static bytes-moved cost model.
+
+    Mirrors fftw's 'probably sub-optimal but instant' behavior: tiny rank-1
+    problems go straight to the single-matmul dft kernel (launch overhead
+    dominates traffic there); everything else takes the feasible candidate
+    that moves the fewest modeled HBM bytes (ties keep the earlier, more
+    conservative entry — the vendor path is enumerated first).
+    """
+    cands = candidates(problem)
+    by_backend = {c.backend: c for c in cands}
     n_inner = problem.extents[-1]
-    if "dft" in cands and n_inner <= 128 and problem.rank == 1:
-        return cands["dft"]
-    if "xla" in cands:
-        return cands["xla"]
-    return cands["bluestein"]
+    if "dft" in by_backend and n_inner <= 128 and problem.rank == 1:
+        return by_backend["dft"]
+    best, best_cost = None, float("inf")
+    for c in cands:
+        cost = estimate_bytes_moved(problem, c)
+        if cost < best_cost:
+            best, best_cost = c, cost
+    if best is not None:
+        return best
+    return by_backend.get("xla", by_backend["bluestein"])
 
 
 def measure_plan(problem: Problem, build: Callable[[Candidate], Callable],
@@ -261,7 +367,13 @@ def measure_plan(problem: Problem, build: Callable[[Candidate], Callable],
 def make_plan(problem: Problem, rigor: PlanRigor,
               build: Callable[[Candidate], Callable] | None = None,
               wisdom=None) -> Plan | None:
-    """The planner. Returns None for WISDOM_ONLY misses (fftw NULL plan)."""
+    """The planner. Returns None for WISDOM_ONLY misses (fftw NULL plan).
+
+    MEASURE/PATIENT consult wisdom first, fftw-style: a persisted selection
+    for this (device, problem) short-circuits the candidate sweep entirely,
+    so a warm Session (or a second process sharing the wisdom file) plans in
+    microseconds instead of re-compiling every candidate.
+    """
     t0 = time.perf_counter()
     if rigor is PlanRigor.WISDOM_ONLY:
         if wisdom is None:
@@ -271,12 +383,22 @@ def make_plan(problem: Problem, rigor: PlanRigor,
             return None
         return Plan(problem, cand, rigor, (time.perf_counter() - t0) * 1e3)
 
+    if wisdom is not None and rigor in (PlanRigor.MEASURE, PlanRigor.PATIENT):
+        cand = wisdom.lookup(problem)
+        if cand is not None:   # tuned knobs persisted by an earlier sweep
+            return Plan(problem, cand, rigor, (time.perf_counter() - t0) * 1e3)
+
     if rigor is PlanRigor.ESTIMATE or build is None:
         cand, timings = estimate_choice(problem), {}
     else:
         cands = candidates(problem, patient=(rigor is PlanRigor.PATIENT))
         cand, timings = measure_plan(problem, build, cands)
     plan = Plan(problem, cand, rigor, (time.perf_counter() - t0) * 1e3, timings)
-    if wisdom is not None and rigor in (PlanRigor.MEASURE, PlanRigor.PATIENT):
+    # persist only selections a sweep actually timed: a build-less
+    # MEASURE/PATIENT call falls back to the untimed ESTIMATE pick, and
+    # recording that would let the wisdom-first short-circuit lock it in
+    # forever as if it had been measured
+    if wisdom is not None and timings \
+            and rigor in (PlanRigor.MEASURE, PlanRigor.PATIENT):
         wisdom.record(problem, cand)
     return plan

@@ -344,6 +344,33 @@ class ResultSet:
         """mean/stdev per (library, extents, precision, kind, rigor, op)."""
         return aggregate_rows(self.rows, op)
 
+    def summary(self) -> dict:
+        """Planner-cost overview (paper Figs. 4-5) without grepping CSV rows:
+        row/failure counts, aggregate planning time (the init ops carry
+        planning + compilation), its cold-compile share, and the plan-cache
+        hit/miss totals — per-row markers plus the session-level stats."""
+        init_ops = ("init_forward", "init_inverse")
+        plan_rows = [r for r in self.rows if r.op in init_ops]
+        events = [r.plan_cache for r in plan_rows if r.plan_cache]
+        total = sum(r.time_ms for r in plan_rows)
+        if events:
+            cold = sum(r.time_ms for r in plan_rows if r.plan_cache == "miss")
+        else:
+            # no hit/miss markers = plan cache off: every init op re-plans
+            # and re-compiles, so the whole planning time is cold
+            cold = total
+        out = {
+            "rows": self.n_rows,
+            "failures": self.n_failures,
+            "plan_time_ms": total,
+            "plan_time_cold_ms": cold,
+            "plan_cache_hits": sum(1 for e in events if e == "hit"),
+            "plan_cache_misses": sum(1 for e in events if e == "miss"),
+        }
+        if self.plan_stats is not None:
+            out["plan_cache"] = self.plan_stats.as_dict()
+        return out
+
     # --- export ------------------------------------------------------------
     def to_csv_string(self) -> str:
         return rows_to_csv(self.rows, self.columns)
@@ -458,10 +485,16 @@ class Session:
             sinks.append(open_sink(spec.output, fmt=spec.format,
                                    columns=columns))
         writer = _TeeSink(sinks)
+        wisdom = self._resolve_wisdom(spec)
         run_nodes(nodes, context=self.context, config=spec.benchmark_config(),
                   writer=writer, plan_cache=cache,
-                  wisdom=self._resolve_wisdom(spec), verbose=spec.verbose)
+                  wisdom=wisdom, verbose=spec.verbose)
         writer.save()
+        if wisdom is not None and spec.rigor in (PlanRigor.MEASURE.value,
+                                                 PlanRigor.PATIENT.value):
+            # persist tuned selections: a warm Session (or a later process
+            # pointing at the same wisdom file) skips the candidate sweep
+            wisdom.save()
         return ResultSet(collector.rows, columns,
                          path=spec.output if spec.output else None,
                          plan_stats=cache.stats if cache else None)

@@ -30,17 +30,24 @@ class Wisdom:
             with open(path) as f:
                 self._store = json.load(f)
 
-    def _key(self, problem: Problem) -> str:
-        return f"{self.device_kind}|{problem.signature()}"
+    def _key(self, problem: Problem, scope: str = "") -> str:
+        """Unscoped keys hold the open planner's (Planned client) choices —
+        the original store layout, so existing wisdom files stay valid.  A
+        ``scope`` (the pinned client's backend) namespaces per-library
+        tuning, mirroring gearshifft's one-wisdom-file-per-binary: a knob
+        sweep won by StockhamPallas must not overwrite the open planner's
+        cross-backend winner for the same problem."""
+        base = f"{self.device_kind}|{problem.signature()}"
+        return f"{base}|{scope}" if scope else base
 
-    def lookup(self, problem: Problem) -> Optional[Candidate]:
-        rec = self._store.get(self._key(problem))
+    def lookup(self, problem: Problem, scope: str = "") -> Optional[Candidate]:
+        rec = self._store.get(self._key(problem, scope))
         if rec is None:
             return None
         return Candidate(rec["backend"], tuple((k, v) for k, v in rec["options"]))
 
-    def record(self, problem: Problem, cand: Candidate) -> None:
-        self._store[self._key(problem)] = {
+    def record(self, problem: Problem, cand: Candidate, scope: str = "") -> None:
+        self._store[self._key(problem, scope)] = {
             "backend": cand.backend,
             "options": [list(kv) for kv in cand.options],
         }

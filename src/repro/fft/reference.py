@@ -58,19 +58,46 @@ def dft_matrix(n: int, inverse: bool = False, dtype=jnp.complex64) -> jnp.ndarra
 
     The direct-matmul backend and the MXU four-step kernels contract against
     exactly this matrix; inverse includes NO 1/n factor (applied by callers).
+
+    Angles are computed host-side in numpy float64 with the j*k product
+    reduced mod n in integer arithmetic — a jnp computation would silently
+    truncate to float32 under the default x64-disabled config, costing
+    accuracy at large n.
     """
-    j = jnp.arange(n)
+    import numpy as np
+    j = np.arange(n, dtype=np.int64)
     sign = 2.0 if inverse else -2.0
-    # float64 intermediate keeps twiddle accuracy for large n even in c64.
-    ang = (sign * jnp.pi / n) * (j[:, None] * j[None, :]).astype(jnp.float64)
-    return jnp.exp(1j * ang).astype(dtype)
+    ang = (sign * np.pi / n) * ((j[:, None] * j[None, :]) % n).astype(np.float64)
+    return jnp.asarray(np.exp(1j * ang), dtype=_canonical(dtype))
 
 
 def twiddles(n1: int, n2: int, inverse: bool = False, dtype=jnp.complex64) -> jnp.ndarray:
-    """Four-step twiddle factors T[j1, k2] = exp(-+ 2 pi i j1 k2 / (n1*n2))."""
+    """Four-step twiddle factors T[j1, k2] = exp(-+ 2 pi i j1 k2 / (n1*n2)).
+
+    Same numerical care as :func:`dft_matrix`: numpy float64 angles with
+    exact integer reduction of j1*k2 mod n.
+    """
+    import numpy as np
     n = n1 * n2
     sign = 2.0 if inverse else -2.0
-    j1 = jnp.arange(n1)
-    k2 = jnp.arange(n2)
-    ang = (sign * jnp.pi / n) * (j1[:, None] * k2[None, :]).astype(jnp.float64)
-    return jnp.exp(1j * ang).astype(dtype)
+    j1 = np.arange(n1, dtype=np.int64)
+    k2 = np.arange(n2, dtype=np.int64)
+    ang = (sign * np.pi / n) * ((j1[:, None] * k2[None, :]) % n).astype(np.float64)
+    return jnp.asarray(np.exp(1j * ang), dtype=_canonical(dtype))
+
+
+def half_roots(n: int, inverse: bool = False, dtype=jnp.complex64) -> jnp.ndarray:
+    """The first n//2 of the n-th unit roots e^{-+ 2 pi i k / n} — the
+    radix-2 Stockham stage twiddles and the R2C pack/unpack twiddles.
+    numpy float64 angles, cast once (same audit as :func:`dft_matrix`)."""
+    import numpy as np
+    sign = 2.0 if inverse else -2.0
+    ang = (sign * np.pi / n) * np.arange(n // 2, dtype=np.float64)
+    return jnp.asarray(np.exp(1j * ang), dtype=_canonical(dtype))
+
+
+def _canonical(dtype):
+    """Requested dtype under the active x64 config (a c128 request with x64
+    disabled means c64, without the per-call truncation warning)."""
+    from jax import dtypes
+    return dtypes.canonicalize_dtype(jnp.dtype(dtype))

@@ -17,6 +17,9 @@ from typing import Callable
 
 import jax.numpy as jnp
 
+from .reference import half_roots as _pack_twiddle
+# (shared float64-angle twiddles — see reference.half_roots for the audit)
+
 CFFT = Callable[..., jnp.ndarray]  # (x, inverse=False) -> y, along last axis
 
 
@@ -44,8 +47,7 @@ def rfft(x: jnp.ndarray, cfft: CFFT) -> jnp.ndarray:
     zrev = jnp.roll(jnp.flip(zf, axis=-1), 1, axis=-1)  # Z[-k mod h]
     even = 0.5 * (zf + jnp.conj(zrev))
     odd = -0.5j * (zf - jnp.conj(zrev))
-    k = jnp.arange(h)
-    tw = jnp.exp((-2j * jnp.pi / n) * k).astype(cdtype)
+    tw = _pack_twiddle(n, inverse=False, dtype=cdtype)
     half = even + tw * odd  # X[0..h-1]
     # X[h] (Nyquist) = even[0] - odd[0] evaluated at k=h: e^{-i pi} = -1
     nyq = (even[..., :1] - odd[..., :1])
@@ -64,11 +66,11 @@ def irfft(y: jnp.ndarray, n: int, cfft: CFFT) -> jnp.ndarray:
 
     h = n // 2
     half, nyq = y[..., :h], y[..., h:h + 1]
-    k = jnp.arange(h)
     half_rev = jnp.roll(jnp.flip(half, axis=-1), 1, axis=-1)
     half_rev = half_rev.at[..., 0].set(nyq[..., 0])  # X[-0] slot carries X[h]
     even = 0.5 * (half + jnp.conj(half_rev))
-    odd = 0.5 * (half - jnp.conj(half_rev)) * jnp.exp((2j * jnp.pi / n) * k).astype(cdtype)
+    odd = 0.5 * (half - jnp.conj(half_rev)) * _pack_twiddle(n, inverse=True,
+                                                           dtype=cdtype)
     z = even + 1j * odd
     zt = cfft(z, inverse=True)
     out = jnp.empty((*y.shape[:-1], n), dtype=_real_dtype(cdtype))

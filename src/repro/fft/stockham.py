@@ -24,12 +24,9 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-
-def _stage_twiddle(n: int, inverse: bool, dtype) -> jnp.ndarray:
-    m = n // 2
-    sign = 2.0 if inverse else -2.0
-    ang = (sign * jnp.pi / n) * jnp.arange(m).astype(jnp.float64)
-    return jnp.exp(1j * ang).astype(dtype)
+from .reference import half_roots as _stage_twiddle  # noqa: F401
+# (float64-angle twiddles; the shared helper replaced a jnp computation that
+# silently truncated to float32 under the default x64-disabled config)
 
 
 def fft(x: jnp.ndarray, inverse: bool = False) -> jnp.ndarray:

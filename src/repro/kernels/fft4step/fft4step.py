@@ -43,8 +43,10 @@ def _fft4step_kernel(xr_ref, xi_ref, w1r_ref, w1i_ref, w2r_ref, w2i_ref,
     w2r, w2i = w2r_ref[...], w2i_ref[...]
     tr, ti = tr_ref[...], ti_ref[...]
 
+    # accumulate in the plane dtype (f32 planes for c64 problems, f64 for
+    # c128 — double runs in interpret mode / on f64-capable backends)
     dot = functools.partial(jax.lax.dot_general,
-                            preferred_element_type=jnp.float32)
+                            preferred_element_type=xr.dtype)
     # column DFTs: B[b,k,n] = sum_j W1[k,j] X[b,j,n]  (contract j with dim 1)
     dims = (((1,), (1,)), ((), ()))  # w1 (k,j) . x (b,j,n) -> (k,b,n)
     br = dot(w1r, xr, dims) - dot(w1i, xi, dims)

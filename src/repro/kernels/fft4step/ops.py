@@ -41,14 +41,16 @@ def fft(x: jnp.ndarray, inverse: bool = False, *, interpret: bool = False,
         x = x.astype(jnp.complex64)
     n = x.shape[-1]
     n1, n2 = choose_factors(n)
+    # planes carry the problem's real dtype (f64 for c128 inputs)
+    rdt = jnp.float64 if x.dtype == jnp.complex128 else jnp.float32
     batch_shape = x.shape[:-1]
     flat = x.reshape(-1, n1, n2)
     b = flat.shape[0]
     tile = min(tile_b, max(1, b))
     pad = (-b) % tile
 
-    xr = jnp.real(flat).astype(jnp.float32)
-    xi = jnp.imag(flat).astype(jnp.float32)
+    xr = jnp.real(flat).astype(rdt)
+    xi = jnp.imag(flat).astype(rdt)
     if pad:
         xr = jnp.pad(xr, ((0, pad), (0, 0), (0, 0)))
         xi = jnp.pad(xi, ((0, pad), (0, 0), (0, 0)))
@@ -56,10 +58,10 @@ def fft(x: jnp.ndarray, inverse: bool = False, *, interpret: bool = False,
     w1 = dft_matrix(n1, inverse=inverse, dtype=jnp.complex128)
     w2 = dft_matrix(n2, inverse=inverse, dtype=jnp.complex128)
     t = twiddles(n1, n2, inverse=inverse, dtype=jnp.complex128)
-    f32 = lambda z: (jnp.real(z).astype(jnp.float32), jnp.imag(z).astype(jnp.float32))
-    w1r, w1i = f32(w1)
-    w2r, w2i = f32(w2)
-    tr, ti = f32(t)
+    planes = lambda z: (jnp.real(z).astype(rdt), jnp.imag(z).astype(rdt))
+    w1r, w1i = planes(w1)
+    w2r, w2i = planes(w2)
+    tr, ti = planes(t)
 
     yr, yi = fft4step(xr, xi, w1r, w1i, w2r, w2i, tr, ti,
                       n1=n1, n2=n2, tile_b=tile, interpret=interpret)

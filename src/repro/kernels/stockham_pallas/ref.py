@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the stockham_pallas kernel: the same general-radix
+DIF Stockham recursion on complex arrays, one stage per HBM pass."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .stockham_pallas import radix_schedule
+
+
+def stockham_ref(x: jnp.ndarray, radix: int = 8,
+                 inverse: bool = False) -> jnp.ndarray:
+    """General-radix Stockham FFT along the last axis (power-of-two length).
+
+    Mirrors the kernel's stage schedule exactly — radix-``radix`` work
+    stages with a 4/2 cleanup — so kernel-vs-ref comparisons isolate the
+    Pallas lowering, not the factorization.  Forward unnormalized, inverse
+    applies 1/n (numpy semantics).
+    """
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    n = x.shape[-1]
+    batch = x.shape[:-1]
+    sign = 2.0 if inverse else -2.0
+
+    cur = n
+    for r in radix_schedule(n, radix):
+        m = cur // r
+        s = n // cur
+        v = x.reshape(*batch, r, m, s)
+        wr = np.exp(1j * (sign * np.pi / r) * np.arange(r, dtype=np.float64))
+        p = np.arange(m, dtype=np.int64)
+        rows = []
+        for u in range(r):
+            acc = sum(v[..., t, :, :] * complex(wr[(t * u) % r])
+                      for t in range(r))
+            ang = (sign * np.pi / cur) * ((u * p) % cur).astype(np.float64)
+            tw = jnp.asarray(np.exp(1j * ang), dtype=x.dtype)
+            rows.append(acc * tw[:, None])
+        x = jnp.stack(rows, axis=-2).reshape(*batch, n)   # (..., m, r, s)
+        cur = m
+
+    if inverse:
+        x = x / n
+    return x

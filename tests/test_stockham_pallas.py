@@ -1,0 +1,167 @@
+"""stockham_pallas kernel + six-step path: interpret-mode numerics vs the
+pure-jnp oracle and numpy, both precisions, batched and rank-2.
+
+(The hypothesis property tests live in test_stockham_pallas_props.py so
+this module still runs where hypothesis is not installed.)
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.fft import nd, sixstep
+from repro.kernels.stockham_pallas import ops as sp_ops
+from repro.kernels.stockham_pallas.ref import stockham_ref
+from repro.kernels.stockham_pallas.stockham_pallas import radix_schedule
+
+RNG = np.random.default_rng(31)
+
+
+def rc(shape, dtype=np.complex64):
+    return (RNG.standard_normal(shape) +
+            1j * RNG.standard_normal(shape)).astype(dtype)
+
+
+def rel_l2(got, want):
+    got, want = np.asarray(got), np.asarray(want)
+    return np.linalg.norm(got - want) / max(np.linalg.norm(want), 1e-300)
+
+
+# --------------------------------------------------------------------------
+# radix schedule
+# --------------------------------------------------------------------------
+def test_radix_schedule():
+    assert radix_schedule(1024, 8) == (8, 8, 8, 2)      # radix-2 cleanup
+    assert radix_schedule(256, 8) == (8, 8, 4)          # radix-4 cleanup
+    assert radix_schedule(4096, 8) == (8, 8, 8, 8)
+    assert radix_schedule(64, 4) == (4, 4, 4)
+    assert radix_schedule(32, 2) == (2,) * 5
+    assert radix_schedule(2, 8) == (2,)
+    for n, radix in ((1 << 20, 8), (1 << 13, 4)):
+        sched = radix_schedule(n, radix)
+        prod = 1
+        for r in sched:
+            prod *= r
+        assert prod == n
+    with pytest.raises(ValueError):
+        radix_schedule(100, 8)
+    with pytest.raises(ValueError):
+        radix_schedule(64, 16)
+
+
+# --------------------------------------------------------------------------
+# kernel vs oracle vs numpy
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [2, 8, 64, 512, 4096])
+@pytest.mark.parametrize("radix", [2, 4, 8])
+@pytest.mark.parametrize("inverse", [False, True])
+def test_kernel_matches_ref_and_numpy(n, radix, inverse):
+    x = rc((3, n))
+    want_np = np.fft.ifft(x, axis=-1) if inverse else np.fft.fft(x, axis=-1)
+    ref = stockham_ref(jnp.asarray(x), radix=radix, inverse=inverse)
+    got = sp_ops.fft(jnp.asarray(x), inverse=inverse, radix=radix,
+                     interpret=True)
+    assert rel_l2(ref, want_np) < 1e-3
+    assert rel_l2(got, want_np) < 1e-3
+    assert rel_l2(got, ref) < 1e-3
+
+
+@pytest.mark.parametrize("batch,tile_b", [((1,), None), ((5,), 4),
+                                          ((2, 3), 8), ((7,), 16)])
+def test_ops_batching_and_padding(batch, tile_b):
+    """Batch tiles that do not divide the flattened batch are padded."""
+    x = rc((*batch, 256))
+    got = sp_ops.fft(jnp.asarray(x), tile_b=tile_b, interpret=True)
+    assert rel_l2(got, np.fft.fft(x, axis=-1)) < 1e-3
+
+
+@pytest.mark.parametrize("n", [16, 1024, 1 << 16, 1 << 20])
+def test_ops_accuracy_c64(n):
+    x = rc((1, n))
+    got = sp_ops.fft(jnp.asarray(x), interpret=True)
+    assert rel_l2(got, np.fft.fft(x, axis=-1)) < 1e-3
+
+
+@pytest.mark.parametrize("n", [16, 2048, 1 << 15])
+def test_ops_accuracy_c128(n):
+    x = rc((2, n), np.complex128)
+    got = sp_ops.fft(jnp.asarray(x), interpret=True)
+    assert np.asarray(got).dtype == np.complex128
+    assert rel_l2(got, np.fft.fft(x, axis=-1)) < 1e-8
+
+
+@pytest.mark.parametrize("n", [8, 512, 4096])
+@pytest.mark.parametrize("dtype", [np.complex64, np.complex128])
+def test_ops_roundtrip(n, dtype):
+    x = rc((3, n), dtype)
+    y = sp_ops.fft(jnp.asarray(x), interpret=True)
+    back = sp_ops.fft(y, inverse=True, interpret=True)
+    tol = 1e-3 if dtype == np.complex64 else 1e-10
+    assert rel_l2(back, x) < tol
+
+
+def test_ops_rank2_via_nd():
+    x = rc((16, 64))
+    eng = lambda v, inverse=False: sp_ops.fft(v, inverse=inverse, interpret=True)
+    got = nd.fftn(jnp.asarray(x), eng)
+    assert rel_l2(got, np.fft.fft2(x)) < 1e-3
+
+
+def test_ops_rejects_bad_lengths():
+    with pytest.raises(ValueError, match="power-of-two"):
+        sp_ops.fft(jnp.asarray(rc((2, 100))), interpret=True)
+    with pytest.raises(ValueError, match="sixstep"):
+        sp_ops.fft(jnp.asarray(rc((1, 1 << 21))), interpret=True)
+
+
+# --------------------------------------------------------------------------
+# six-step large-N path
+# --------------------------------------------------------------------------
+def test_sixstep_split():
+    assert sixstep.choose_split(1 << 20) == (64, 16384)
+    assert sixstep.choose_split(1 << 16) == (4, 16384)
+    assert sixstep.choose_split(4) == (2, 2)
+    # planner knob wins when valid, falls back when not
+    assert sixstep.choose_split(1 << 16, n1=256) == (256, 256)
+    assert sixstep.choose_split(1 << 16, n1=3) == (4, 16384)
+    assert sixstep.choose_split(1 << 16, n1=1 << 15) == (4, 16384)  # n2 too small
+    with pytest.raises(ValueError):
+        sixstep.choose_split(100)
+
+
+@pytest.mark.parametrize("n", [4, 256, 4096, 1 << 16, 1 << 20])
+def test_sixstep_matches_numpy_c64(n):
+    x = rc((1 if n >= 1 << 16 else 3, n))
+    got = sixstep.fft(jnp.asarray(x), interpret=True)
+    assert rel_l2(got, np.fft.fft(x, axis=-1)) < 1e-3
+
+
+@pytest.mark.parametrize("n", [256, 1 << 16])
+def test_sixstep_matches_numpy_c128(n):
+    x = rc((2, n), np.complex128)
+    got = sixstep.fft(jnp.asarray(x), interpret=True)
+    assert np.asarray(got).dtype == np.complex128
+    assert rel_l2(got, np.fft.fft(x, axis=-1)) < 1e-8
+
+
+@pytest.mark.parametrize("n,n1", [(4096, 64), (1 << 16, 1024)])
+def test_sixstep_split_knob(n, n1):
+    x = rc((2, n))
+    got = sixstep.fft(jnp.asarray(x), n1=n1, interpret=True)
+    assert rel_l2(got, np.fft.fft(x, axis=-1)) < 1e-3
+
+
+@pytest.mark.parametrize("dtype", [np.complex64, np.complex128])
+def test_sixstep_roundtrip(dtype):
+    x = rc((2, 1 << 14), dtype)
+    y = sixstep.fft(jnp.asarray(x), interpret=True)
+    back = sixstep.fft(y, inverse=True, interpret=True)
+    tol = 1e-3 if dtype == np.complex64 else 1e-10
+    assert rel_l2(back, x) < tol
+
+
+def test_sixstep_rank2_via_nd():
+    x = rc((8, 256))
+    eng = lambda v, inverse=False: sixstep.fft(v, inverse=inverse, interpret=True)
+    got = nd.fftn(jnp.asarray(x), eng)
+    assert rel_l2(got, np.fft.fft2(x)) < 1e-3

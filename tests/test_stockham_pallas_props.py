@@ -1,0 +1,57 @@
+"""Property tests for the fused Stockham kernel and the six-step path
+(separate module: test_stockham_pallas.py must run without hypothesis)."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.fft import sixstep
+from repro.kernels.stockham_pallas import ops as sp_ops
+
+
+def rel_l2(got, want):
+    got, want = np.asarray(got), np.asarray(want)
+    return np.linalg.norm(got - want) / max(np.linalg.norm(want), 1e-300)
+
+
+@settings(max_examples=12, deadline=None)
+@given(logn=st.integers(1, 12), radix=st.sampled_from([2, 4, 8]),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_stockham_pallas_roundtrip(logn, radix, seed):
+    n = 2 ** logn
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((2, n)) +
+         1j * rng.standard_normal((2, n))).astype(np.complex64)
+    y = sp_ops.fft(jnp.asarray(x), radix=radix, interpret=True)
+    back = sp_ops.fft(y, inverse=True, radix=radix, interpret=True)
+    assert rel_l2(back, x) < 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(logn=st.integers(1, 12), radix=st.sampled_from([2, 4, 8]),
+       inverse=st.booleans(), seed=st.integers(0, 2**31 - 1))
+def test_property_stockham_pallas_matches_numpy(logn, radix, inverse, seed):
+    n = 2 ** logn
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((3, n)) +
+         1j * rng.standard_normal((3, n))).astype(np.complex64)
+    got = sp_ops.fft(jnp.asarray(x), inverse=inverse, radix=radix,
+                     interpret=True)
+    want = np.fft.ifft(x, axis=-1) if inverse else np.fft.fft(x, axis=-1)
+    assert rel_l2(got, want) < 1e-3
+
+
+@settings(max_examples=8, deadline=None)
+@given(logn=st.integers(2, 14), seed=st.integers(0, 2**31 - 1))
+def test_property_sixstep_roundtrip(logn, seed):
+    n = 2 ** logn
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((2, n)) +
+         1j * rng.standard_normal((2, n))).astype(np.complex64)
+    back = sixstep.fft(sixstep.fft(jnp.asarray(x), interpret=True),
+                       inverse=True, interpret=True)
+    assert rel_l2(back, x) < 1e-3

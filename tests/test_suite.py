@@ -228,6 +228,35 @@ def test_result_set_aggregate_matches_result_writer():
     assert (lib, op, mean, n) == ("lib", "execute_forward", 2.0, 3)
 
 
+def test_result_set_summary_surfaces_plan_cost():
+    from repro.core.plan import PlanCacheStats
+    rows = _rows() + [
+        Row("lib", "cpu", "64", 1, "powerof2", "float", "Outplace_Real",
+            "measure", -1, "init_forward", 40.0, 0, True, "",
+            plan_cache="miss"),
+        Row("lib", "cpu", "64", 1, "powerof2", "float", "Outplace_Real",
+            "measure", 0, "init_forward", 1.5, 0, True, "", plan_cache="hit"),
+        Row("lib", "cpu", "64", 1, "powerof2", "float", "Outplace_Real",
+            "measure", 0, "init_inverse", 2.5, 0, True, "", plan_cache="hit"),
+    ]
+    stats = PlanCacheStats(hits=2, misses=1, cold_ms=40.0)
+    s = ResultSet(rows, columns_for(True), plan_stats=stats).summary()
+    assert s["rows"] == 7 and s["failures"] == 1
+    assert s["plan_time_ms"] == pytest.approx(44.0)
+    assert s["plan_time_cold_ms"] == pytest.approx(40.0)
+    assert (s["plan_cache_hits"], s["plan_cache_misses"]) == (2, 1)
+    assert s["plan_cache"] == {"hits": 2, "misses": 1, "cold_ms": 40.0}
+    # without a plan cache the session-level block is absent, rest works
+    s2 = ResultSet(_rows(), COLUMNS).summary()
+    assert "plan_cache" not in s2 and s2["plan_time_ms"] == 0.0
+    # cache off: no hit/miss markers — every init op re-plans, so the
+    # whole planning time is cold, not zero
+    s3 = ResultSet(_rows() + [
+        Row("lib", "cpu", "64", 1, "powerof2", "float", "Outplace_Real",
+            "measure", 0, "init_forward", 30.0, 0, True, "")], COLUMNS).summary()
+    assert s3["plan_time_ms"] == s3["plan_time_cold_ms"] == pytest.approx(30.0)
+
+
 def test_result_set_concat_and_save(tmp_path):
     a = ResultSet(_rows(), COLUMNS)
     b = ResultSet(_rows(), COLUMNS)

@@ -1,0 +1,117 @@
+"""Per-backend FFT throughput over a fixed extent grid — the PR-over-PR
+perf trajectory record.
+
+Times the *forward transform only* (the hot path the tentpole kernels
+optimize), via the same ``build_forward`` the planner's MEASURE sweep uses,
+and writes one JSON document:
+
+    PYTHONPATH=src python tools/bench_compare.py --out BENCH_PR3.json
+    PYTHONPATH=src python tools/bench_compare.py --smoke --out /tmp/b.json
+
+``--smoke`` shrinks the grid/reps to seconds for the CI interpret-mode run.
+Throughput is complex-signal GiB/s moved at the *algorithmic minimum* of
+one HBM read + one write — so a fused one-pass kernel scores its real
+bandwidth while a log-N staged backend is penalized for its extra passes,
+which is exactly the trajectory worth recording (paper Fig. 8).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import numpy as np
+
+DEFAULT_EXTENTS = (1 << 10, 1 << 12, 1 << 14, 1 << 16)
+SMOKE_EXTENTS = (1 << 8, 1 << 10)
+
+DEFAULT_BACKENDS = ("xla", "stockham", "fourstep", "fourstep_pallas",
+                    "stockham_pallas", "sixstep", "bluestein")
+
+
+def bench_backend(backend: str, n: int, batch: int, reps: int,
+                  warmups: int) -> dict:
+    import jax
+    from repro.core.client import Problem
+    from repro.core.plan import Candidate
+    from repro.core.clients.jax_fft import build_forward
+
+    problem = Problem((n,), "Outplace_Complex", "float", batch=batch)
+    rec = {"backend": backend, "extent": n, "batch": batch}
+    try:
+        fn = build_forward(problem, Candidate(backend))
+        rng = np.random.default_rng(0)
+        x = (rng.standard_normal((batch, n)) +
+             1j * rng.standard_normal((batch, n))).astype(np.complex64)
+        xd = jax.device_put(x)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(xd))
+        rec["compile_ms"] = (time.perf_counter() - t0) * 1e3
+        for _ in range(warmups):
+            jax.block_until_ready(fn(xd))
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(xd))
+            best = min(best, time.perf_counter() - t0)
+        rec["time_ms"] = best * 1e3
+        moved = 2 * x.nbytes          # one read + one write of the signal
+        rec["gib_per_s"] = moved / best / 2**30
+        rec["ok"] = True
+    except Exception as e:  # infeasible extent for this backend: record it
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}")
+    return rec
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="BENCH_PR3.json")
+    p.add_argument("--backends", nargs="+", default=list(DEFAULT_BACKENDS))
+    p.add_argument("--extents", nargs="+", type=int, default=None)
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--reps", type=int, default=5)
+    p.add_argument("--warmups", type=int, default=1)
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny grid + 1 rep (CI interpret-mode smoke)")
+    args = p.parse_args(argv)
+    if args.smoke:
+        extents = list(args.extents or SMOKE_EXTENTS)
+        reps, warmups = 1, 0
+    else:
+        extents = list(args.extents or DEFAULT_EXTENTS)
+        reps, warmups = args.reps, args.warmups
+
+    import jax
+    dev = jax.devices()[0]
+    doc = {
+        "meta": {
+            "device_kind": dev.device_kind,
+            "platform": dev.platform,
+            "interpret_kernels": dev.platform != "tpu",
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "batch": args.batch,
+            "reps": reps,
+            "note": "forward c64 transform, min-of-reps; gib_per_s assumes "
+                    "the one-read+one-write algorithmic minimum",
+        },
+        "results": [],
+    }
+    for n in extents:
+        for backend in args.backends:
+            rec = bench_backend(backend, n, args.batch, reps, warmups)
+            doc["results"].append(rec)
+            status = (f"{rec['time_ms']:9.3f} ms  {rec['gib_per_s']:7.2f} GiB/s"
+                      if rec["ok"] else f"infeasible: {rec['error']}")
+            print(f"n=2^{n.bit_length()-1:<3} {backend:16s} {status}")
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"wrote {len(doc['results'])} records to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
