@@ -1,8 +1,9 @@
-"""Paper Fig. 6: FFT-only runtime per backend, 1D and 3D — the
+"""Paper Fig. 6: FFT-only runtime per backend, 1D/2D/3D — the
 CPU-vs-GPU-library comparison mapped onto our backend set (xla = vendor
 library, fourstep = MXU formulation, stockham = butterfly baseline,
 stockham_pallas = fused in-VMEM Stockham kernel, sixstep = composed
-large-N kernel path; Pallas kernels run in interpret mode off-TPU)."""
+large-N kernel path, fft2_pallas = fused rank-2 kernel vs the separable
+per-axis path; Pallas kernels run in interpret mode off-TPU)."""
 
 from __future__ import annotations
 
@@ -16,6 +17,11 @@ SPECS = {
     "1d": SuiteSpec(clients=("XlaFFT", "Stockham", "FourStep", "Bluestein",
                              "StockhamPallas", "SixStep"),
                     extents=("256", "4096", "65536"),
+                    kinds=("Outplace_Real",), precisions=("float",),
+                    warmups=1, plan_cache=False, output=None),
+    "2d": SuiteSpec(clients=("XlaFFT", "Stockham", "Fft2Pallas",
+                             "StockhamPallas"),
+                    extents=("64x64", "256x256"),
                     kinds=("Outplace_Real",), precisions=("float",),
                     warmups=1, plan_cache=False, output=None),
     "3d": SuiteSpec(clients=("XlaFFT", "Stockham", "FourStep", "Bluestein",

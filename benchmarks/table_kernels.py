@@ -130,6 +130,39 @@ class StockhamJnpKernel(KernelClient):
         return stockham.fft(x)
 
 
+@register_client()
+class Fft2PallasKernel(KernelClient):
+    """Fused rank-2 kernel: whole n1 x n2 tile in VMEM, one HBM touch."""
+    title = "KernelFft2PallasInterp"
+
+    @classmethod
+    def make_host_input(cls, problem: Problem, seed: int):
+        return (rand_complex((problem.batch, *problem.extents), seed=seed),)
+
+    def _call(self, x):
+        from repro.kernels.fft2_pallas import ops as f2_ops
+        return f2_ops.fft2(x, interpret=True)
+
+
+@register_client()
+class Fft2SeparableKernel(KernelClient):
+    """The same 2D transform as two fused 1-D kernel passes + swapaxes —
+    what the planner's separable path pays when fft2_pallas is off."""
+    title = "KernelFft2Separable"
+
+    @classmethod
+    def make_host_input(cls, problem: Problem, seed: int):
+        return (rand_complex((problem.batch, *problem.extents), seed=seed),)
+
+    def _call(self, x):
+        from repro.fft import nd
+        from repro.kernels.stockham_pallas import ops as sp_ops
+        return nd.fftn(
+            x, lambda v, inverse=False: sp_ops.fft(v, inverse=inverse,
+                                                   interpret=True),
+            axes=(-2, -1))
+
+
 # fused-vs-unfused fftconv workload: c channels, b batch, length L, taps K
 C, B, K = 4, 4, 64
 
@@ -180,6 +213,10 @@ SPECS = (
               extents=("2048",), batch=1,
               kinds=("Outplace_Real",), precisions=("float",),
               warmups=2, plan_cache=False, output=None),
+    SuiteSpec(clients=("KernelFft2PallasInterp", "KernelFft2Separable"),
+              extents=("64x64",), batch=4,
+              kinds=("Outplace_Complex",), precisions=("float",),
+              warmups=2, plan_cache=False, output=None),
 )
 
 #: client title -> the table row name (kept from the pre-spec version)
@@ -190,6 +227,8 @@ NAMES = {
     "KernelStockhamJnp": "kernel/stockham_jnp/4096x8",
     "KernelFftconvFused": "kernel/fftconv_fused_interp/2048",
     "KernelFftconvUnfused": "kernel/fftconv_unfused_xla/2048",
+    "KernelFft2PallasInterp": "kernel/fft2_pallas_interp/64x64x4",
+    "KernelFft2Separable": "kernel/fft2_separable_interp/64x64x4",
 }
 
 

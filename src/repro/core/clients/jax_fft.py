@@ -2,7 +2,7 @@
 client implementations, one per backend engine.
 
 Backend map (DESIGN.md §2):
-  xla              XLA's native FFT HLO ("vendor library")
+  xla              XLA's native FFT HLO ("vendor library", whole-ND)
   stockham         pure-jnp Stockham autosort (radix-2 butterfly baseline)
   fourstep         matmul-DFT four-step (MXU formulation, jnp)
   fourstep_pallas  fused four-step Pallas kernel, n <= 16384 (interpret off-TPU)
@@ -12,8 +12,19 @@ Backend map (DESIGN.md §2):
   sixstep          large-N path composing stockham_pallas residual
                    transforms with the fused four-step kernel
                    (knobs: split_n1, tile_b)
+  fft2_pallas      fused rank-2 kernel: row stages, in-VMEM transpose,
+                   column stages on one resident n1 x n2 tile — the whole
+                   2D transform in one HBM touch (knobs: tile_b, radix)
   dft              direct matmul DFT Pallas kernel (tiny extents)
   bluestein        chirp-Z (any size)
+
+Plans are ND-native: a candidate may assign a different backend to every
+axis (``Candidate.axes``); separable engines are applied per axis through
+``nd.fftn``'s minimal-transpose path, while the whole-transform backends
+(xla, fft2_pallas) take the fused route.  Real kinds run the packed
+half-spectrum path on top of whichever complex backend the planner picked —
+per-axis engines through ``nd.rfftn``, fused ones through
+``rfft.rfftn_packed``.
 
 A client owns device buffers + AOT-compiled executables for ONE Problem —
 the jit-specialization equivalent of gearshifft's compile-time template
@@ -38,6 +49,7 @@ from ..plan import (Candidate, Plan, PlanCache, PlanRigor, cached_build,
 from ..registry import register_client
 from ..wisdom import Wisdom
 from repro.fft import bluestein, fourstep, nd, stockham
+from repro.fft import rfft as rfft_mod
 
 
 def _on_tpu() -> bool:
@@ -84,16 +96,42 @@ def _engine(cand: Candidate) -> Callable:
     raise ValueError(f"unknown backend {b!r}")
 
 
+def _fft2_engine(cand: Candidate) -> Callable:
+    """Whole-transform engine cfft2(x, inverse=False) over the LAST TWO
+    axes: the fused rank-2 Pallas kernel."""
+    from repro.kernels.fft2_pallas import ops as f2_ops
+    opts = cand.opts()
+    tile_b = opts.get("tile_b")
+    radix = opts.get("radix", 8)
+    interp = not _on_tpu()
+    return lambda x, inverse=False: f2_ops.fft2(x, inverse=inverse,
+                                                tile_b=tile_b, radix=radix,
+                                                interpret=interp)
+
+
+def _axis_engines(problem: Problem, cand: Candidate) -> list[Callable]:
+    """One separable engine per axis from the (possibly per-axis) plan."""
+    return [_engine(c) for c in cand.per_axis(problem.rank)]
+
+
 def _forward_fn(problem: Problem, cand: Candidate) -> Callable:
     axes = tuple(range(-problem.rank, 0))
     if cand.backend == "xla":
         if problem.complex_input:
             return lambda x: jnp.fft.fftn(x, axes=axes)
         return lambda x: jnp.fft.rfftn(x, axes=axes)
-    eng = _engine(cand)
+    if cand.backend == "fft2_pallas":
+        if problem.rank != 2:   # fail loudly, like every other backend's
+            raise ValueError(   # infeasible build — never silent wrong math
+                f"fft2_pallas is rank-2 only, got rank {problem.rank}")
+        eng2 = _fft2_engine(cand)
+        if problem.complex_input:
+            return eng2
+        return lambda x: rfft_mod.rfftn_packed(x, eng2, rank=2)
+    engines = _axis_engines(problem, cand)
     if problem.complex_input:
-        return lambda x: nd.fftn(x, eng, axes=axes)
-    return lambda x: nd.rfftn(x, eng, axes=axes)
+        return lambda x: nd.fftn(x, engines, axes=axes)
+    return lambda x: nd.rfftn(x, engines, axes=axes)
 
 
 def _inverse_fn(problem: Problem, cand: Candidate) -> Callable:
@@ -102,15 +140,28 @@ def _inverse_fn(problem: Problem, cand: Candidate) -> Callable:
         if problem.complex_input:
             return lambda y: jnp.fft.ifftn(y, axes=axes)
         return lambda y: jnp.fft.irfftn(y, s=problem.extents, axes=axes)
-    eng = _engine(cand)
+    if cand.backend == "fft2_pallas":
+        if problem.rank != 2:
+            raise ValueError(
+                f"fft2_pallas is rank-2 only, got rank {problem.rank}")
+        eng2 = _fft2_engine(cand)
+        if problem.complex_input:
+            return lambda y: eng2(y, inverse=True)
+        return lambda y: rfft_mod.irfftn_packed(y, problem.extents, eng2)
+    engines = _axis_engines(problem, cand)
     if problem.complex_input:
-        return lambda y: nd.fftn(y, eng, axes=axes, inverse=True)
-    return lambda y: nd.irfftn(y, problem.extents, eng, axes=axes)
+        return lambda y: nd.fftn(y, engines, axes=axes, inverse=True)
+    return lambda y: nd.irfftn(y, problem.extents, engines, axes=axes)
 
 
 def build_forward(problem: Problem, cand: Candidate) -> Callable:
     """jit-compiled forward for planner MEASURE timing."""
     return jax.jit(_forward_fn(problem, cand))
+
+
+def build_inverse(problem: Problem, cand: Candidate) -> Callable:
+    """jit-compiled inverse (the conformance matrix's roundtrip leg)."""
+    return jax.jit(_inverse_fn(problem, cand))
 
 
 class JaxFFTClient(FFTClient):
@@ -157,7 +208,12 @@ class JaxFFTClient(FFTClient):
     def get_alloc_size(self) -> int:
         n_in = self.problem.signal_bytes
         if self.problem.inplace:
-            return n_in
+            if self.problem.complex_input:
+                return n_in
+            # FFTW padded in-place r2c layout: the real array's last axis is
+            # padded to 2*(n/2+1) reals so the n/2+1 complex half-spectrum
+            # bins fit in place — the padding is part of the allocation
+            return self._halfspec_bytes()
         # out-of-place: plus the spectrum buffer
         if self.problem.complex_input:
             return 2 * n_in
@@ -320,6 +376,12 @@ class StockhamPallasClient(JaxFFTClient):
 class SixStepClient(JaxFFTClient):
     title = "SixStep"
     backend_filter = "sixstep"
+
+
+@register_client()
+class Fft2PallasClient(JaxFFTClient):
+    title = "Fft2Pallas"
+    backend_filter = "fft2_pallas"
 
 
 @register_client()

@@ -35,15 +35,36 @@ class PlanRigor(enum.Enum):
 
 @dataclass(frozen=True)
 class Candidate:
-    """One point in the planner's search space."""
+    """One point in the planner's search space.
 
-    backend: str                      # 'xla' | 'fourstep' | 'stockham' | 'bluestein' | 'dft'
+    A candidate is either *homogeneous* (one backend applied per axis, or a
+    whole-transform backend from :data:`FUSED_ND`) or — when ``axes`` is
+    non-empty — a **per-axis assignment**: ``axes[i]`` transforms
+    ``extents[i]`` (outermost first), each with its own backend and knobs.
+    Per-axis candidates carry the placeholder backend ``'nd'``.
+    """
+
+    backend: str          # 'xla' | 'stockham' | ... | 'fft2_pallas' | 'nd'
     options: tuple[tuple[str, Any], ...] = ()
+    axes: tuple["Candidate", ...] = ()   # per-axis assignment (ND-native)
 
     def opts(self) -> dict[str, Any]:
         return dict(self.options)
 
+    def per_axis(self, rank: int) -> tuple["Candidate", ...]:
+        """The axis-by-axis assignment this candidate denotes: its explicit
+        ``axes``, or the same (backend, knobs) replicated across ``rank``."""
+        if self.axes:
+            if len(self.axes) != rank:
+                raise ValueError(
+                    f"candidate assigns {len(self.axes)} axes to a rank-"
+                    f"{rank} problem: {self.key()}")
+            return self.axes
+        return (Candidate(self.backend, self.options),) * rank
+
     def key(self) -> str:
+        if self.axes:
+            return "nd[" + ";".join(a.key() for a in self.axes) + "]"
         o = ",".join(f"{k}={v}" for k, v in self.options)
         return f"{self.backend}({o})" if o else self.backend
 
@@ -178,38 +199,103 @@ FOURSTEP_PALLAS_MAX_N = 128 * 128        # one fused four-step kernel pass
 STOCKHAM_PALLAS_MAX_N = 1 << 20          # ops.MAX_N: single-kernel hard cap
 STOCKHAM_PALLAS_VMEM_N = 1 << 15         # fits a useful batch tile in VMEM
 SIXSTEP_MIN_N, SIXSTEP_MAX_N = 4, 1 << 24
+FFT2_PALLAS_MAX_ELEMS = 1 << 18          # fft2 ops.MAX_ELEMS: hard cap
+FFT2_PALLAS_VMEM_ELEMS = 1 << 16         # n1*n2 tile fits the VMEM budget
+
+#: Whole-transform backends: one engine call covers every axis, so the
+#: separable path's swapaxes traffic never happens.
+FUSED_ND = ("xla", "fft2_pallas")
+
+#: Every backend the planner knows, in enumeration (preference-tie) order.
+BACKENDS = ("xla", "stockham", "fourstep", "dft", "fourstep_pallas",
+            "stockham_pallas", "sixstep", "fft2_pallas", "bluestein")
+
+
+def axis_feasible(backend: str, n: int) -> bool:
+    """Can ``backend`` transform one batched axis of extent ``n``?  This is
+    the engine-level contract: the length the cfft actually receives (for
+    the packed r2c innermost axis that is n//2, see ``axis_engine_n``)."""
+    if backend in ("xla", "bluestein"):
+        return True
+    if backend == "stockham":
+        return _pow2(n)
+    if backend == "fourstep":
+        return _smooth(n)
+    if backend == "dft":
+        return n <= 128
+    if backend == "fourstep_pallas":
+        return _kernel_factorable(n)
+    if backend == "stockham_pallas":
+        return _pow2(n) and n <= STOCKHAM_PALLAS_MAX_N
+    if backend == "sixstep":
+        # the engine falls back to the fused Stockham kernel below
+        # SIXSTEP_MIN_N (packed-real halves can land there)
+        return _pow2(n) and n <= SIXSTEP_MAX_N and n >= 2
+    return False
+
+
+def axis_engine_n(problem: Problem, axis: int) -> int:
+    """Extent the 1-D engine actually transforms along ``axis``.
+
+    Real kinds take the packed half-length path on the innermost axis (the
+    cfft runs at n//2 for even n; odd lengths pay the full complex
+    transform), so feasibility and the cost model must look at that length,
+    not the nominal extent."""
+    n = problem.extents[axis]
+    if problem.complex_input or axis < problem.rank - 1:
+        return n
+    return n // 2 if n % 2 == 0 and n > 1 else n
+
+
+def fft2_feasible(problem: Problem) -> bool:
+    """The fused rank-2 kernel holds the whole n1 x n2 tile in VMEM."""
+    exts = problem.extents
+    return (len(exts) == 2 and all(_pow2(v) for v in exts)
+            and exts[0] * exts[1] <= FFT2_PALLAS_MAX_ELEMS
+            and (problem.complex_input or exts[-1] % 2 == 0))
+
+
+def backend_supports(backend: str, problem: Problem) -> bool:
+    """Single source of truth for the support matrix: candidates(), the
+    conformance matrix, and the README table all consult this."""
+    if backend == "fft2_pallas":
+        return fft2_feasible(problem)
+    if backend == "xla":
+        return True
+    if backend == "sixstep":
+        # offered only where the six-step composition is the real algorithm
+        if not all(_pow2(v) and SIXSTEP_MIN_N <= v <= SIXSTEP_MAX_N
+                   for v in problem.extents):
+            return False
+    return all(axis_feasible(backend, axis_engine_n(problem, i))
+               for i in range(problem.rank))
 
 
 def candidates(problem: Problem, patient: bool = False) -> list[Candidate]:
     """Enumerate feasible (backend, knob) combinations for a problem.
 
-    Backends transform the innermost extent; outer extents are batched via
-    nd-application, so feasibility is decided per-axis (all axes must be
-    supported by the backend).  ``patient=True`` widens the space with the
-    fused kernels' tunable knobs — fourstep_pallas/stockham_pallas batch
-    tiles, the Stockham radix schedule, and the six-step n1*n2 split — the
-    FFTW_PATIENT analogue of searching algorithm *and* implementation
-    parameters.
+    The space is ND-native: besides homogeneous candidates (one backend for
+    every axis) it holds the whole-transform backends (``xla``, and the
+    fused rank-2 ``fft2_pallas`` kernel) and **per-axis assignments**
+    (``Candidate.axes``) mixing backends across axes, pruned by the
+    bytes-moved model.  ``patient=True`` widens the space with the fused
+    kernels' tunable knobs — batch tiles, the Stockham radix schedule, the
+    six-step n1*n2 split, the fft2 radix — the FFTW_PATIENT analogue of
+    searching algorithm *and* implementation parameters.
     """
     exts = problem.extents
     out: list[Candidate] = [Candidate("xla")]
-    if all(_pow2(v) for v in exts):
-        out.append(Candidate("stockham"))
-    if all(_smooth(v) for v in exts):
-        out.append(Candidate("fourstep"))
-    if all(v <= 128 for v in exts):
-        out.append(Candidate("dft"))
-    if all(_kernel_factorable(v) for v in exts):
-        out.append(Candidate("fourstep_pallas"))
-    if all(_pow2(v) and v <= STOCKHAM_PALLAS_MAX_N for v in exts):
-        out.append(Candidate("stockham_pallas"))
-    if all(_pow2(v) and SIXSTEP_MIN_N <= v <= SIXSTEP_MAX_N for v in exts):
-        out.append(Candidate("sixstep"))
+    for b in ("stockham", "fourstep", "dft", "fourstep_pallas",
+              "stockham_pallas", "sixstep", "fft2_pallas"):
+        if backend_supports(b, problem):
+            out.append(Candidate(b))
     out.append(Candidate("bluestein"))  # always feasible
+    if problem.rank >= 2:
+        out += _mixed_candidates(problem, limit=12 if patient else 6)
     if patient:
         extra = []
         for c in out:
-            if c.options:
+            if c.options or c.axes:
                 continue
             if c.backend == "fourstep_pallas":
                 for tb in (4, 8, 16):
@@ -224,8 +310,44 @@ def candidates(problem: Problem, patient: bool = False) -> list[Candidate]:
                 for n1 in _sixstep_splits(exts[-1]):
                     extra.append(Candidate("sixstep", (("split_n1", n1),)))
                 extra.append(Candidate("sixstep", (("tile_b", 16),)))
+            elif c.backend == "fft2_pallas":
+                for tb in (2, 8):
+                    for radix in (4, 8):
+                        extra.append(Candidate(
+                            "fft2_pallas",
+                            (("radix", radix), ("tile_b", tb))))
         out += extra
     return out
+
+
+def _mixed_candidates(problem: Problem, limit: int) -> list[Candidate]:
+    """Per-axis backend assignments, pruned by the bytes-moved model.
+
+    For each axis, rank the separable backends by modeled engine passes at
+    that axis's (packed) extent and keep the best two; the cross product —
+    minus homogeneous assignments, which are already enumerated — is then
+    re-ranked by the full ND model and truncated to ``limit``.  This is how
+    the planner expresses e.g. 'dft on the tiny outer axis, fused Stockham
+    on the long inner one' without sweeping every combination."""
+    import itertools
+
+    per_axis: list[list[str]] = []
+    for i in range(problem.rank):
+        n_eng = axis_engine_n(problem, i)
+        feas = [b for b in BACKENDS
+                if b not in FUSED_ND and axis_feasible(b, n_eng)]
+        feas.sort(key=lambda b: hbm_passes(b, n_eng))
+        per_axis.append(feas[:2])
+    scored = []
+    for combo in itertools.product(*per_axis):
+        if len(set(combo)) == 1:
+            continue  # homogeneous: already in the candidate list
+        cand = Candidate("nd", axes=tuple(Candidate(b) for b in combo))
+        cost = estimate_bytes_moved(problem, cand)
+        if cost != float("inf"):
+            scored.append((cost, cand))
+    scored.sort(key=lambda t: t[0])
+    return [cand for _, cand in scored[:limit]]
 
 
 def _sixstep_splits(n: int) -> list[int]:
@@ -270,8 +392,12 @@ def hbm_passes(backend: str, n: int) -> float:
     if backend == "xla":
         return 2.0      # vendor path: multi-stage but heavily fused
     if backend == "stockham":
+        if not _pow2(n):
+            return inf
         return float(max(1, n.bit_length() - 1))   # one pass per stage
     if backend == "fourstep":
+        if not _smooth(n):
+            return inf
         levels = 1
         m = n
         while m > 128:
@@ -298,14 +424,54 @@ def hbm_passes(backend: str, n: int) -> float:
     return inf
 
 
+def _axis_elems(problem: Problem, axis: int) -> int:
+    """Complex elements the transform carries while working on ``axis``.
+
+    Complex kinds move the whole signal on every axis.  Real kinds run the
+    innermost axis packed at half the elements (even n) and every outer
+    axis on the half-spectrum — n_last//2 + 1 bins along the last axis —
+    which is the traffic halving the paper's Fig. 8a measures."""
+    if problem.complex_input:
+        return problem.n_elems
+    n_last = problem.extents[-1]
+    rows = problem.n_elems // n_last
+    if axis == problem.rank - 1:
+        return rows * (n_last // 2) if n_last % 2 == 0 else problem.n_elems
+    return rows * (n_last // 2 + 1)
+
+
 def estimate_bytes_moved(problem: Problem, cand: Candidate) -> float:
-    """Modeled HBM bytes for the full nd transform under ``cand``: each
-    transformed axis moves the whole (complex) signal ``hbm_passes`` times,
-    twice per pass (read + write)."""
-    complex_bytes = problem.n_elems * (16 if problem.precision == "double" else 8)
+    """Modeled HBM bytes for the full nd transform under ``cand``.
+
+    Whole-transform backends (:data:`FUSED_ND`) move the signal their fixed
+    number of passes with **no** transpose traffic.  Separable assignments
+    charge, per axis: the engine's ``hbm_passes`` at the extent the engine
+    actually sees (packed half-length on a real innermost axis), *plus* the
+    two swapaxes passes ``nd._apply_last`` really performs for every
+    non-innermost axis — zero for the innermost one.  Each pass reads and
+    writes the live elements once (see :func:`_axis_elems` for the r2c
+    half-spectrum sizes).  ``inf`` marks an infeasible assignment.
+    """
+    complex_itemsize = 16 if problem.precision == "double" else 8
+    if cand.backend in FUSED_ND:
+        elems = _axis_elems(problem, problem.rank - 1)
+        if cand.backend == "xla":
+            passes = 2.0   # vendor path: multi-stage but heavily fused
+        else:              # fft2_pallas: one read + one write of the tile
+            # the VMEM budget binds the tile the kernel actually holds:
+            # real kinds run packed, so the inner extent halves (even n)
+            tile_elems = (problem.extents[0] *
+                          axis_engine_n(problem, problem.rank - 1))
+            feasible = (fft2_feasible(problem)
+                        and tile_elems <= FFT2_PALLAS_VMEM_ELEMS)
+            passes = 1.0 if feasible else float("inf")
+        return passes * 2.0 * elems * complex_itemsize
     total = 0.0
-    for ext in problem.extents:
-        total += hbm_passes(cand.backend, ext) * 2.0 * complex_bytes
+    for axis, ax_cand in enumerate(cand.per_axis(problem.rank)):
+        passes = hbm_passes(ax_cand.backend, axis_engine_n(problem, axis))
+        if axis != problem.rank - 1:
+            passes += 2.0   # swapaxes in + out around the engine call
+        total += passes * 2.0 * _axis_elems(problem, axis) * complex_itemsize
     return total
 
 
@@ -316,7 +482,8 @@ def estimate_choice(problem: Problem) -> Candidate:
     problems go straight to the single-matmul dft kernel (launch overhead
     dominates traffic there); everything else takes the feasible candidate
     that moves the fewest modeled HBM bytes (ties keep the earlier, more
-    conservative entry — the vendor path is enumerated first).
+    conservative entry — the vendor path is enumerated first, per-axis
+    mixed assignments last).
     """
     cands = candidates(problem)
     by_backend = {c.backend: c for c in cands}

@@ -505,5 +505,44 @@ def run_suite(spec: SuiteSpec, session: Optional[Session] = None) -> ResultSet:
     return (session if session is not None else Session()).run(spec)
 
 
+# ---------------------------------------------------------------------------
+# support matrix
+# ---------------------------------------------------------------------------
+#: Power-of-two probe extents per rank used to answer "does this backend
+#: support rank r at all?" — pow2 so every pow2-only backend registers its
+#: ranks; extent-dependent caps (VMEM budgets, smoothness) still apply to
+#: individual problems via ``plan.backend_supports``.
+SUPPORT_PROBE_EXTENTS = {1: (16,), 2: (8, 16), 3: (4, 4, 8)}
+
+
+def support_matrix(kinds: Sequence[str] = KINDS,
+                   precisions: Sequence[str] = PRECISIONS,
+                   probes: Optional[dict] = None) -> list[dict]:
+    """The backend x kind x rank x precision feasibility table.
+
+    One row per cell, ``{"backend", "kind", "precision", "rank", "extents",
+    "supported"}`` — the single source of truth behind the README's
+    support-matrix section and the conformance matrix's cell enumeration
+    (``tests/test_conformance.py`` sweeps exactly the supported cells).
+    """
+    from .client import Problem
+    from .plan import BACKENDS, backend_supports
+
+    probes = dict(SUPPORT_PROBE_EXTENTS if probes is None else probes)
+    rows = []
+    for backend in BACKENDS:
+        for rank, extents in sorted(probes.items()):
+            for kind in kinds:
+                for precision in precisions:
+                    problem = Problem(tuple(extents), kind, precision)
+                    rows.append({
+                        "backend": backend, "kind": kind,
+                        "precision": precision, "rank": rank,
+                        "extents": tuple(extents),
+                        "supported": backend_supports(backend, problem),
+                    })
+    return rows
+
+
 __all__ = ["SweepSpec", "SuiteSpec", "ResultSet", "Session", "run_suite",
-           "SWEEP_CLASSES"]
+           "SWEEP_CLASSES", "SUPPORT_PROBE_EXTENTS", "support_matrix"]

@@ -21,6 +21,21 @@ from .plan import Candidate, PlanRigor
 DEFAULT_PATH = os.path.expanduser("~/.cache/repro/wisdom.json")
 
 
+def _candidate_to_record(cand: Candidate) -> dict:
+    rec = {"backend": cand.backend,
+           "options": [list(kv) for kv in cand.options]}
+    if cand.axes:   # per-axis ND assignment: recurse (old records omit it)
+        rec["axes"] = [_candidate_to_record(a) for a in cand.axes]
+    return rec
+
+
+def _candidate_from_record(rec: dict) -> Candidate:
+    return Candidate(rec["backend"],
+                     tuple((k, v) for k, v in rec["options"]),
+                     tuple(_candidate_from_record(a)
+                           for a in rec.get("axes", ())))
+
+
 class Wisdom:
     def __init__(self, path: str = DEFAULT_PATH, device_kind: str = ""):
         self.path = path
@@ -44,13 +59,10 @@ class Wisdom:
         rec = self._store.get(self._key(problem, scope))
         if rec is None:
             return None
-        return Candidate(rec["backend"], tuple((k, v) for k, v in rec["options"]))
+        return _candidate_from_record(rec)
 
     def record(self, problem: Problem, cand: Candidate, scope: str = "") -> None:
-        self._store[self._key(problem, scope)] = {
-            "backend": cand.backend,
-            "options": [list(kv) for kv in cand.options],
-        }
+        self._store[self._key(problem, scope)] = _candidate_to_record(cand)
 
     def save(self) -> None:
         os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)

@@ -10,17 +10,34 @@ at most one transpose in and its inverse out — and none at all when the axis
 rank 1).  The previous ``moveaxis(cfft(moveaxis(...)))`` paid the double
 transpose unconditionally; on rank-2/3 problems that was a full extra pair of
 HBM passes per transform.
+
+The planner is ND-native: a per-axis candidate assignment maps each axis to
+its own engine, so ``cfft`` may be a single callable (same engine every
+axis) **or** a sequence of callables aligned with ``axes`` — e.g. the tiny
+outer axis of a (4, 65536) problem on the matmul-DFT kernel while the long
+inner axis runs the fused Stockham kernel.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Sequence
+from typing import Callable, Sequence, Union
 
 import jax.numpy as jnp
 
 from . import rfft as _rfft
 
 CFFT = Callable[..., jnp.ndarray]
+CFFTS = Union[CFFT, Sequence[CFFT]]
+
+
+def _per_axis(cfft: CFFTS, n_axes: int) -> Sequence[CFFT]:
+    """Normalize ``cfft`` to one engine per axis."""
+    if callable(cfft):
+        return (cfft,) * n_axes
+    fns = tuple(cfft)
+    if len(fns) != n_axes:
+        raise ValueError(f"{len(fns)} engines for {n_axes} axes")
+    return fns
 
 
 def _apply_last(x: jnp.ndarray, ax: int, fn: Callable[[jnp.ndarray], jnp.ndarray]
@@ -34,28 +51,30 @@ def _apply_last(x: jnp.ndarray, ax: int, fn: Callable[[jnp.ndarray], jnp.ndarray
     return jnp.swapaxes(fn(jnp.swapaxes(x, ax, -1)), ax, -1)
 
 
-def fftn(x: jnp.ndarray, cfft: CFFT, axes: Sequence[int] | None = None,
+def fftn(x: jnp.ndarray, cfft: CFFTS, axes: Sequence[int] | None = None,
          inverse: bool = False) -> jnp.ndarray:
     axes = tuple(range(x.ndim)) if axes is None else tuple(axes)
-    for ax in axes:
-        x = _apply_last(x, ax, lambda v: cfft(v, inverse=inverse))
+    for ax, fn in zip(axes, _per_axis(cfft, len(axes))):
+        x = _apply_last(x, ax, lambda v, f=fn: f(v, inverse=inverse))
     return x
 
 
-def rfftn(x: jnp.ndarray, cfft: CFFT, axes: Sequence[int] | None = None) -> jnp.ndarray:
+def rfftn(x: jnp.ndarray, cfft: CFFTS, axes: Sequence[int] | None = None) -> jnp.ndarray:
     axes = tuple(range(x.ndim)) if axes is None else tuple(axes)
+    fns = _per_axis(cfft, len(axes))
     last, rest = axes[-1], axes[:-1]
-    y = _apply_last(x, last, lambda v: _rfft.rfft(v, cfft))
-    for ax in rest:
-        y = _apply_last(y, ax, cfft)
+    y = _apply_last(x, last, lambda v: _rfft.rfft(v, fns[-1]))
+    for ax, fn in zip(rest, fns[:-1]):
+        y = _apply_last(y, ax, fn)
     return y
 
 
-def irfftn(y: jnp.ndarray, shape: Sequence[int], cfft: CFFT,
+def irfftn(y: jnp.ndarray, shape: Sequence[int], cfft: CFFTS,
            axes: Sequence[int] | None = None) -> jnp.ndarray:
     axes = tuple(range(y.ndim)) if axes is None else tuple(axes)
+    fns = _per_axis(cfft, len(axes))
     last, rest = axes[-1], axes[:-1]
-    for ax in rest:
-        y = _apply_last(y, ax, lambda v: cfft(v, inverse=True))
+    for ax, fn in zip(rest, fns[:-1]):
+        y = _apply_last(y, ax, lambda v, f=fn: f(v, inverse=True))
     n_last = shape[-1] if len(shape) else y.shape[last]
-    return _apply_last(y, last, lambda v: _rfft.irfft(v, n_last, cfft))
+    return _apply_last(y, last, lambda v: _rfft.irfft(v, n_last, fns[-1]))

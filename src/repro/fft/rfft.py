@@ -9,6 +9,16 @@ We implement the classical half-length packing trick so every complex backend
            X[k] = (Z[k] + conj(Z[-k]))/2  -  (i/2) e^{-2pi i k/n} (Z[k] - conj(Z[-k]))
            for k = 0..n/2 (with Z indices mod n/2) — n/2+1 outputs.
   odd n:   fall back to full complex transform of the realified input.
+
+``rfftn_packed``/``irfftn_packed`` generalize the trick to *whole-transform*
+complex engines (the fused rank-2 Pallas kernel, or anything transforming
+several trailing axes at once): because the axis-0..d-2 DFTs are linear and
+commute with the last-axis pack, the packed signal can run through one fused
+rank-d complex transform and unpack afterwards — the reversal ``Z[-k]``
+simply becomes the index reversal mod *every* transformed axis
+(``FFT(conj a)[k] = conj(FFT(a)[-k])`` per axis).  Real kinds therefore plan
+through the packed path on top of **any** selected complex backend,
+separable or fused.
 """
 
 from __future__ import annotations
@@ -73,6 +83,74 @@ def irfft(y: jnp.ndarray, n: int, cfft: CFFT) -> jnp.ndarray:
                                                            dtype=cdtype)
     z = even + 1j * odd
     zt = cfft(z, inverse=True)
+    out = jnp.empty((*y.shape[:-1], n), dtype=_real_dtype(cdtype))
+    out = out.at[..., 0::2].set(jnp.real(zt))
+    out = out.at[..., 1::2].set(jnp.imag(zt))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# packed real transforms over a fused rank-d complex engine
+# ---------------------------------------------------------------------------
+def _rev_mod(a: jnp.ndarray, axes) -> jnp.ndarray:
+    """Index reversal mod the extent on each given axis:
+    ``out[..., k, ...] = a[..., (-k) % n, ...]``."""
+    for ax in axes:
+        a = jnp.roll(jnp.flip(a, axis=ax), 1, axis=ax)
+    return a
+
+
+def rfftn_packed(x: jnp.ndarray, cfftn: CFFT, rank: int) -> jnp.ndarray:
+    """Forward R2C over the trailing ``rank`` axes using the whole-transform
+    complex engine ``cfftn`` (e.g. the fused rank-2 Pallas kernel).
+
+    Output shape: last axis becomes n//2 + 1 bins (numpy rfftn layout).
+    Even last extents run the packed half-length trick through ONE fused
+    complex transform; odd extents pay the full complex transform.
+    """
+    n = x.shape[-1]
+    cdtype = _complex_dtype(x.dtype)
+    t_axes = tuple(range(-rank, 0))
+    if n % 2:
+        return cfftn(x.astype(cdtype))[..., : n // 2 + 1]
+
+    h = n // 2
+    z = x[..., 0::2].astype(cdtype) + 1j * x[..., 1::2].astype(cdtype)
+    zf = cfftn(z)                        # fused rank-d transform of the pack
+    zrev = _rev_mod(zf, t_axes)          # Z[(-k) mod shape] on every axis
+    even = 0.5 * (zf + jnp.conj(zrev))
+    odd = -0.5j * (zf - jnp.conj(zrev))
+    tw = _pack_twiddle(n, inverse=False, dtype=cdtype)
+    half = even + tw * odd               # X[..., 0..h-1]
+    nyq = even[..., :1] - odd[..., :1]   # k_last = h: tw = e^{-i pi} = -1
+    return jnp.concatenate([half, nyq], axis=-1)
+
+
+def irfftn_packed(y: jnp.ndarray, shape, cfftn: CFFT) -> jnp.ndarray:
+    """Inverse C2R over the trailing ``len(shape)`` axes using a
+    whole-transform complex engine (input n//2+1 bins on the last axis)."""
+    shape = tuple(shape)
+    rank, n = len(shape), shape[-1]
+    cdtype = y.dtype if jnp.issubdtype(y.dtype, jnp.complexfloating) \
+        else _complex_dtype(y.dtype)
+    y = y.astype(cdtype)
+    outer_axes = tuple(range(-rank, -1))
+    if n % 2:
+        # Hermitian reconstruction of the full last axis, full C2C inverse:
+        # X[k_outer, n-k] = conj(X[-k_outer, k])
+        tail = jnp.conj(_rev_mod(jnp.flip(y[..., 1:], axis=-1), outer_axes))
+        full = jnp.concatenate([y, tail], axis=-1)
+        return jnp.real(cfftn(full, inverse=True)).astype(_real_dtype(cdtype))
+
+    h = n // 2
+    half, nyq = y[..., :h], y[..., h:h + 1]
+    half_rev = jnp.roll(jnp.flip(half, axis=-1), 1, axis=-1)
+    half_rev = half_rev.at[..., :1].set(nyq)      # X[-0] slot carries X[h]
+    g = jnp.conj(_rev_mod(half_rev, outer_axes))  # E - tw*O at (k_outer, k)
+    even = 0.5 * (half + g)
+    odd = 0.5 * (half - g) * _pack_twiddle(n, inverse=True, dtype=cdtype)
+    z = even + 1j * odd
+    zt = cfftn(z, inverse=True)
     out = jnp.empty((*y.shape[:-1], n), dtype=_real_dtype(cdtype))
     out = out.at[..., 0::2].set(jnp.real(zt))
     out = out.at[..., 1::2].set(jnp.imag(zt))

@@ -76,6 +76,12 @@ def fft(x: jnp.ndarray, inverse: bool = False, *, n1: int | None = None,
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
         x = x.astype(jnp.complex64)
     n = x.shape[-1]
+    if n < 4 and (n & (n - 1)) == 0:
+        # below the smallest n1*n2 split there is nothing to compose; run
+        # the single fused kernel directly.  This keeps the backend usable
+        # on the packed-real innermost axis, whose engine length is n//2.
+        return stockham_ops.fft(x, inverse=inverse, tile_b=tile_b,
+                                interpret=interpret)
     n1, n2 = choose_split(n, n1)
     batch = x.shape[:-1]
 

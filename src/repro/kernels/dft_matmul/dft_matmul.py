@@ -32,11 +32,13 @@ def _dft_kernel(xr_ref, xi_ref, wr_ref, wi_ref, yr_ref, yi_ref):
     xi = xi_ref[...]
     wr = wr_ref[...]
     wi = wi_ref[...]
-    # complex matmul on the MXU; f32 accumulation
-    yr_ref[...] = jnp.dot(xr, wr, preferred_element_type=jnp.float32) - \
-                  jnp.dot(xi, wi, preferred_element_type=jnp.float32)
-    yi_ref[...] = jnp.dot(xr, wi, preferred_element_type=jnp.float32) + \
-                  jnp.dot(xi, wr, preferred_element_type=jnp.float32)
+    # complex matmul on the MXU; accumulate in the plane dtype (f32, or f64
+    # for complex128 problems — the conformance matrix's 1e-8 double bar)
+    pet = xr.dtype
+    yr_ref[...] = jnp.dot(xr, wr, preferred_element_type=pet) - \
+                  jnp.dot(xi, wi, preferred_element_type=pet)
+    yi_ref[...] = jnp.dot(xr, wi, preferred_element_type=pet) + \
+                  jnp.dot(xi, wr, preferred_element_type=pet)
 
 
 @functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))

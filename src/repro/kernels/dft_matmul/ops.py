@@ -34,13 +34,16 @@ def dft(x: jnp.ndarray, inverse: bool = False, *, interpret: bool = False,
     flat = x.reshape(-1, n)
     b = flat.shape[0]
 
+    # planes carry the problem's real dtype (float64 for complex128), so
+    # double-precision problems keep double-precision accumulation
+    real_dtype = jnp.float64 if x.dtype == jnp.complex128 else jnp.float32
     w = dft_matrix(n, inverse=inverse, dtype=jnp.complex128)
-    wr = jnp.real(w).astype(jnp.float32)
-    wi = jnp.imag(w).astype(jnp.float32)
+    wr = jnp.real(w).astype(real_dtype)
+    wi = jnp.imag(w).astype(real_dtype)
 
     tile = min(tile_b, max(8, b))
-    xr = _pad_rows(jnp.real(flat).astype(jnp.float32), tile)
-    xi = _pad_rows(jnp.imag(flat).astype(jnp.float32), tile)
+    xr = _pad_rows(jnp.real(flat).astype(real_dtype), tile)
+    xi = _pad_rows(jnp.imag(flat).astype(real_dtype), tile)
     yr, yi = dft_matmul(xr, xi, wr, wi, tile_b=tile, interpret=interpret)
     y = (yr[:b] + 1j * yi[:b]).reshape(*batch_shape, n).astype(x.dtype)
     if inverse:

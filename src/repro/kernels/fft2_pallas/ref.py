@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fft2_pallas kernel: the same per-axis general-
+radix Stockham recursion applied row-wise, transposed, column-wise — one
+HBM pass per stage, so kernel-vs-ref comparisons isolate the fused Pallas
+lowering (single tile residency + in-VMEM transpose), not the math."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..stockham_pallas.ref import stockham_ref
+
+
+def fft2_ref(x: jnp.ndarray, radix: int = 8,
+             inverse: bool = False) -> jnp.ndarray:
+    """General-radix rank-2 Stockham FFT over the last two axes (power-of-
+    two extents).  Forward unnormalized; inverse applies 1/(n1*n2) — the
+    two per-axis 1/n factors compose (numpy semantics), matching ops.fft2."""
+    y = stockham_ref(x, radix=radix, inverse=inverse)          # rows (n2)
+    y = jnp.swapaxes(y, -1, -2)
+    y = stockham_ref(y, radix=radix, inverse=inverse)          # columns (n1)
+    return jnp.swapaxes(y, -1, -2)

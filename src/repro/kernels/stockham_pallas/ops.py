@@ -54,13 +54,16 @@ def pack_twiddles(n: int, radices: tuple[int, ...], inverse: bool,
     return twr, twi, tuple(offsets)
 
 
-def default_tile_b(n: int, batch: int, itemsize: int) -> int:
-    """Largest power-of-two batch tile whose working planes (~6 of them:
-    in/out/stage temporaries) fit the VMEM budget."""
-    per_row = 6 * n * itemsize
+def default_tile_b(n: int, batch: int, itemsize: int, *, planes: int = 6,
+                   cap: int = 256) -> int:
+    """Largest power-of-two batch tile whose working planes fit the VMEM
+    budget.  ``planes`` is the live-plane estimate per signal row (~6 here:
+    in/out/stage temporaries; the rank-2 kernel passes 8 for its transpose
+    temporaries), ``cap`` the kernel's tile ceiling."""
+    per_row = planes * n * itemsize
     tile = max(1, VMEM_BUDGET_BYTES // max(1, per_row))
     tile = 1 << (tile.bit_length() - 1)
-    return max(1, min(tile, 256, batch))
+    return max(1, min(tile, cap, batch))
 
 
 @functools.partial(jax.jit,

@@ -107,36 +107,43 @@ def _butterfly(parts, r: int, inverse: bool):
     return outs
 
 
-def _stockham_kernel(xr_ref, xi_ref, twr_ref, twi_ref, yr_ref, yi_ref, *,
-                     n: int, radices: tuple[int, ...],
-                     offsets: tuple[tuple[int, ...], ...], inverse: bool):
-    xr = xr_ref[...]                   # (TB, n)
-    xi = xi_ref[...]
-    twr = twr_ref[0]                   # (L,) packed per-stage twiddles
-    twi = twi_ref[0]
-    tb = xr.shape[0]
-
+def apply_stages(xr, xi, twr, twi, *, n: int, radices: tuple[int, ...],
+                 offsets: tuple[tuple[int, ...], ...], inverse: bool):
+    """Run the whole Stockham stage chain along the LAST axis of the
+    VMEM-resident planes ``xr``/``xi`` (any leading batch dims).  Shared by
+    the rank-1 kernel and the fused rank-2 kernel (which calls it once per
+    axis around an in-VMEM transpose).  ``twr``/``twi`` are the packed
+    per-stage twiddle vectors, ``offsets`` the static per-(stage, u) slice
+    starts from ``ops.pack_twiddles``."""
+    lead = xr.shape[:-1]
+    ones = (1,) * len(lead)
     cur = n
     for stage, r in enumerate(radices):
         m = cur // r
         s = n // cur                   # stride invariant: cur * s == n
-        vr = xr.reshape(tb, r, m, s)
-        vi = xi.reshape(tb, r, m, s)
-        parts = [(vr[:, t], vi[:, t]) for t in range(r)]
+        vr = xr.reshape(*lead, r, m, s)
+        vi = xi.reshape(*lead, r, m, s)
+        parts = [(vr[..., t, :, :], vi[..., t, :, :]) for t in range(r)]
         outs = _butterfly(parts, r, inverse)
         rows = [outs[0]]               # u = 0: twiddle is all-ones
         for u in range(1, r):
             off = offsets[stage][u - 1]
-            wr = twr[off:off + m].reshape(1, m, 1)
-            wi = twi[off:off + m].reshape(1, m, 1)
+            wr = twr[off:off + m].reshape(*ones, m, 1)
+            wi = twi[off:off + m].reshape(*ones, m, 1)
             br, bi = outs[u]
             rows.append((br * wr - bi * wi, br * wi + bi * wr))
-        xr = jnp.stack([p[0] for p in rows], axis=2).reshape(tb, n)
-        xi = jnp.stack([p[1] for p in rows], axis=2).reshape(tb, n)
+        xr = jnp.stack([p[0] for p in rows], axis=-2).reshape(*lead, n)
+        xi = jnp.stack([p[1] for p in rows], axis=-2).reshape(*lead, n)
         cur = m
+    return xr, xi
 
-    yr_ref[...] = xr
-    yi_ref[...] = xi
+
+def _stockham_kernel(xr_ref, xi_ref, twr_ref, twi_ref, yr_ref, yi_ref, *,
+                     n: int, radices: tuple[int, ...],
+                     offsets: tuple[tuple[int, ...], ...], inverse: bool):
+    yr_ref[...], yi_ref[...] = apply_stages(
+        xr_ref[...], xi_ref[...], twr_ref[0], twi_ref[0],
+        n=n, radices=radices, offsets=offsets, inverse=inverse)
 
 
 @functools.partial(

@@ -1,0 +1,48 @@
+"""Shared numeric-accuracy helpers for the whole test suite.
+
+One place for the rel-L2 metric, the gearshifft tolerance policy, and the
+numpy differential references, so the conformance matrix and the per-kernel
+tests measure the same thing with the same bar instead of each module
+carrying its own ad-hoc copy.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+#: gearshifft-style roundtrip/forward accuracy bars (rel-L2 against a
+#: float64 reference): single precision 1e-3, double precision 1e-8.
+REL_L2_TOL = {"float": 1e-3, "double": 1e-8}
+
+
+def rel_l2(got, want) -> float:
+    """Relative L2 distance ||got - want|| / ||want|| (0-safe)."""
+    got = np.asarray(got, dtype=np.complex128)
+    want = np.asarray(want, dtype=np.complex128)
+    return float(np.linalg.norm(got - want) /
+                 max(np.linalg.norm(want), 1e-300))
+
+
+def assert_rel_l2(got, want, precision: str = "float", what: str = "") -> None:
+    err = rel_l2(got, want)
+    tol = REL_L2_TOL[precision]
+    assert err < tol, f"{what or 'output'}: rel_l2={err:.3e} >= {tol:g}"
+
+
+def rand_input(problem, seed: int = 0) -> np.ndarray:
+    """Random host input matching a Problem's dtype/shape (batch leading)."""
+    rng = np.random.default_rng(seed)
+    shape = (problem.batch, *problem.extents)
+    x = rng.standard_normal(shape).astype(problem.real_dtype)
+    if problem.complex_input:
+        x = (x + 1j * rng.standard_normal(shape)).astype(problem.input_dtype)
+    return x
+
+
+def numpy_forward(problem, x: np.ndarray) -> np.ndarray:
+    """float64 numpy reference of the forward transform over the problem's
+    trailing axes (fftn for complex kinds, rfftn for real kinds)."""
+    axes = tuple(range(-problem.rank, 0))
+    if problem.complex_input:
+        return np.fft.fftn(x.astype(np.complex128), axes=axes)
+    return np.fft.rfftn(x.astype(np.float64), axes=axes)

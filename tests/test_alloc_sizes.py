@@ -1,0 +1,62 @@
+"""Device-buffer accounting: JaxFFTClient.get_alloc_size pinned for all
+four kind x placement combinations (paper Table 1's get_alloc_size), with
+the FFTW padded in-place r2c layout — an in-place real transform allocates
+2*(n/2+1) reals along the last axis so the half-spectrum fits in place."""
+
+import pytest
+
+from repro.core.client import Context, Problem
+from repro.core.clients.jax_fft import JaxFFTClient
+
+
+def alloc(extents, kind, precision="float", batch=1):
+    problem = Problem(tuple(extents), kind, precision, batch=batch)
+    return JaxFFTClient(problem, Context()).get_alloc_size(), problem
+
+
+def halfspec_bytes(extents, real_itemsize, batch=1):
+    rows = batch
+    for v in extents[:-1]:
+        rows *= v
+    return rows * (extents[-1] // 2 + 1) * 2 * real_itemsize
+
+
+@pytest.mark.parametrize("extents", [(16,), (8, 16), (4, 4, 8), (8, 15)])
+@pytest.mark.parametrize("precision,itemsize", [("float", 4), ("double", 8)])
+def test_all_four_kind_placement_combinations(extents, precision, itemsize):
+    n_elems = 1
+    for v in extents:
+        n_elems *= v
+
+    # Outplace_Complex: signal + spectrum, both full complex
+    got, p = alloc(extents, "Outplace_Complex", precision)
+    assert got == 2 * n_elems * 2 * itemsize
+    # Inplace_Complex: one full complex buffer
+    got, p = alloc(extents, "Inplace_Complex", precision)
+    assert got == n_elems * 2 * itemsize
+    # Outplace_Real: real signal + half-spectrum buffer
+    got, p = alloc(extents, "Outplace_Real", precision)
+    assert got == n_elems * itemsize + halfspec_bytes(extents, itemsize)
+    # Inplace_Real: FFTW padded layout — 2*(n/2+1) reals on the last axis,
+    # NOT the unpadded signal size
+    got, p = alloc(extents, "Inplace_Real", precision)
+    assert got == halfspec_bytes(extents, itemsize)
+
+
+def test_inplace_real_padding_exceeds_signal():
+    """The padding is real: for even last extents the in-place allocation
+    is one extra complex column wider than the input signal."""
+    got, p = alloc((8, 16), "Inplace_Real")
+    assert got == 8 * (16 // 2 + 1) * 2 * 4    # 8 rows x 9 bins x c64
+    assert got > p.signal_bytes                # 576 > 512
+    # odd last extent: 2*(15//2+1) = 16 reals per 15-real row
+    got, p = alloc((8, 15), "Inplace_Real")
+    assert got == 8 * 8 * 2 * 4 and got > p.signal_bytes
+
+
+def test_batch_scales_every_kind():
+    for kind in ("Inplace_Real", "Inplace_Complex",
+                 "Outplace_Real", "Outplace_Complex"):
+        one, _ = alloc((8, 16), kind, batch=1)
+        four, _ = alloc((8, 16), kind, batch=4)
+        assert four == 4 * one, kind

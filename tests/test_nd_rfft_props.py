@@ -1,0 +1,132 @@
+"""Property tests for the ND separable path (``repro.fft.nd``) and the
+packed real transforms (``repro.fft.rfft``): axes-permutation invariance,
+Hermitian symmetry of r2c output, linearity, and fused-vs-separable
+equivalence.  (Importorskip-gated like test_stockham_pallas_props.py so the
+suite runs where hypothesis is not installed.)"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from helpers.accuracy import rel_l2
+from repro.fft import fourstep, nd, stockham
+from repro.fft import rfft as rfft_mod
+
+jax.config.update("jax_enable_x64", True)
+
+#: pow2 shapes (stockham engine) and mixed-smooth shapes incl. odd last
+#: extents (fourstep engine)
+POW2_SHAPES = [(4, 8), (8, 4), (2, 4, 8), (8, 8, 8), (16, 4)]
+SMOOTH_SHAPES = [(6, 10), (5, 8), (4, 9), (3, 4, 10), (2, 3, 5)]
+
+
+def _rand(shape, seed, complex_=True):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape)
+    if complex_:
+        x = (x + 1j * rng.standard_normal(shape)).astype(np.complex64)
+    else:
+        x = x.astype(np.float32)
+    return x
+
+
+@settings(max_examples=15, deadline=None)
+@given(si=st.integers(0, len(POW2_SHAPES) - 1), seed=st.integers(0, 2**31 - 1),
+       perm_seed=st.integers(0, 2**31 - 1))
+def test_property_fftn_axes_permutation_invariance(si, seed, perm_seed):
+    """A separable ND transform is an unordered set of axis transforms: any
+    axis-application order gives the same spectrum."""
+    x = _rand(POW2_SHAPES[si], seed)
+    axes = list(range(x.ndim))
+    perm = list(np.random.default_rng(perm_seed).permutation(axes))
+    base = np.asarray(nd.fftn(jnp.asarray(x), stockham.fft, axes=axes))
+    permuted = np.asarray(nd.fftn(jnp.asarray(x), stockham.fft, axes=perm))
+    assert rel_l2(permuted, base) < 1e-4
+    assert rel_l2(base, np.fft.fftn(x)) < 1e-3
+
+
+@settings(max_examples=15, deadline=None)
+@given(si=st.integers(0, len(SMOOTH_SHAPES) - 1),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_rfftn_hermitian_symmetry(si, seed):
+    """r2c output of a real signal obeys Y[k] = conj(Y[-k mod shape]): the
+    reconstructed full spectrum must equal the complex transform."""
+    x = _rand(SMOOTH_SHAPES[si], seed, complex_=False)
+    half = np.asarray(nd.rfftn(jnp.asarray(x), fourstep.fft))
+    full = np.asarray(nd.fftn(jnp.asarray(x).astype(jnp.complex64),
+                              fourstep.fft))
+    n = x.shape[-1]
+    assert half.shape[-1] == n // 2 + 1
+    # stored half agrees with the full spectrum...
+    assert rel_l2(half, full[..., : n // 2 + 1]) < 1e-3
+    # ...and the dropped bins are the Hermitian mirror of the stored ones
+    rev = full
+    for ax in range(full.ndim):
+        rev = np.roll(np.flip(rev, axis=ax), 1, axis=ax)
+    assert rel_l2(full, np.conj(rev)) < 1e-3
+
+
+@settings(max_examples=15, deadline=None)
+@given(si=st.integers(0, len(POW2_SHAPES) - 1), seed=st.integers(0, 2**31 - 1),
+       a=st.floats(-2, 2), b=st.floats(-2, 2))
+def test_property_rfftn_linearity(si, seed, a, b):
+    x = _rand(POW2_SHAPES[si], seed, complex_=False)
+    y = _rand(POW2_SHAPES[si], seed + 1, complex_=False)
+    lhs = np.asarray(nd.rfftn(jnp.asarray(a * x + b * y), stockham.fft))
+    rhs = (a * np.asarray(nd.rfftn(jnp.asarray(x), stockham.fft)) +
+           b * np.asarray(nd.rfftn(jnp.asarray(y), stockham.fft)))
+    scale = max(1.0, abs(a) + abs(b))
+    assert rel_l2(lhs, rhs) < 1e-3 * scale
+
+
+@settings(max_examples=15, deadline=None)
+@given(si=st.integers(0, len(SMOOTH_SHAPES) - 1),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_rfftn_roundtrip(si, seed):
+    """gearshifft validation invariant, odd last extents included."""
+    shape = SMOOTH_SHAPES[si]
+    x = _rand(shape, seed, complex_=False)
+    spec = nd.rfftn(jnp.asarray(x), fourstep.fft)
+    back = np.asarray(nd.irfftn(spec, shape, fourstep.fft))
+    assert rel_l2(back, x) < 1e-3
+
+
+@settings(max_examples=15, deadline=None)
+@given(si=st.integers(0, len(POW2_SHAPES) - 1),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_packed_fused_matches_separable(si, seed):
+    """rfftn_packed over a whole-transform engine equals the separable
+    per-axis packed path (the fused rank-2 kernel's correctness backbone)."""
+    shape = POW2_SHAPES[si]
+    rank = len(shape)
+    x = _rand(shape, seed, complex_=False)
+
+    def cfftn(z, inverse=False):
+        return nd.fftn(z, stockham.fft, axes=tuple(range(-rank, 0)),
+                       inverse=inverse)
+
+    fused = np.asarray(rfft_mod.rfftn_packed(jnp.asarray(x), cfftn, rank))
+    separable = np.asarray(nd.rfftn(jnp.asarray(x), stockham.fft))
+    assert rel_l2(fused, separable) < 1e-3
+    back = np.asarray(rfft_mod.irfftn_packed(jnp.asarray(fused), shape, cfftn))
+    assert rel_l2(back, x) < 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(si=st.integers(0, len(POW2_SHAPES) - 1),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_per_axis_engines_match_single_engine(si, seed):
+    """ND-native planning invariant: a per-axis engine list (even a mixed
+    one) computes the same spectrum as one engine applied to every axis."""
+    shape = POW2_SHAPES[si]
+    x = _rand(shape, seed)
+    engines = [stockham.fft if i % 2 == 0 else fourstep.fft
+               for i in range(len(shape))]
+    mixed = np.asarray(nd.fftn(jnp.asarray(x), engines))
+    single = np.asarray(nd.fftn(jnp.asarray(x), stockham.fft))
+    assert rel_l2(mixed, single) < 1e-3

@@ -77,14 +77,21 @@ def test_hbm_passes_model():
 
 
 def test_estimate_bytes_moved_scales():
-    p64 = Problem((4096,))
+    # complex kinds: the engine moves the full signal
+    p64 = Problem((4096,), "Outplace_Complex")
     one_pass = estimate_bytes_moved(p64, Candidate("stockham_pallas"))
     staged = estimate_bytes_moved(p64, Candidate("stockham"))
     assert one_pass == 2.0 * 4096 * 8        # read + write, c64 bytes
     assert staged == 12 * one_pass           # log2(4096) passes
     # double precision doubles the traffic
-    assert estimate_bytes_moved(Problem((4096,), precision="double"),
+    assert estimate_bytes_moved(Problem((4096,), "Outplace_Complex",
+                                        precision="double"),
                                 Candidate("stockham_pallas")) == 2 * one_pass
+    # real kinds ride the packed half-length path: half the traffic (and
+    # one fewer stage for the staged backend, which runs at n/2)
+    real = estimate_bytes_moved(Problem((4096,), "Outplace_Real"),
+                                Candidate("stockham_pallas"))
+    assert real == one_pass / 2
 
 
 def test_estimate_choice_uses_model():

@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 import jax.numpy as jnp
 
+from helpers.accuracy import rel_l2
 from repro.fft import nd, sixstep
 from repro.kernels.stockham_pallas import ops as sp_ops
 from repro.kernels.stockham_pallas.ref import stockham_ref
@@ -20,11 +21,6 @@ RNG = np.random.default_rng(31)
 def rc(shape, dtype=np.complex64):
     return (RNG.standard_normal(shape) +
             1j * RNG.standard_normal(shape)).astype(dtype)
-
-
-def rel_l2(got, want):
-    got, want = np.asarray(got), np.asarray(want)
-    return np.linalg.norm(got - want) / max(np.linalg.norm(want), 1e-300)
 
 
 # --------------------------------------------------------------------------

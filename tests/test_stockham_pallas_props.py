@@ -9,13 +9,9 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from helpers.accuracy import rel_l2
 from repro.fft import sixstep
 from repro.kernels.stockham_pallas import ops as sp_ops
-
-
-def rel_l2(got, want):
-    got, want = np.asarray(got), np.asarray(want)
-    return np.linalg.norm(got - want) / max(np.linalg.norm(want), 1e-300)
 
 
 @settings(max_examples=12, deadline=None)

@@ -5,10 +5,13 @@ Times the *forward transform only* (the hot path the tentpole kernels
 optimize), via the same ``build_forward`` the planner's MEASURE sweep uses,
 and writes one JSON document:
 
-    PYTHONPATH=src python tools/bench_compare.py --out BENCH_PR3.json
+    PYTHONPATH=src python tools/bench_compare.py --out BENCH_PR4.json
     PYTHONPATH=src python tools/bench_compare.py --smoke --out /tmp/b.json
 
 ``--smoke`` shrinks the grid/reps to seconds for the CI interpret-mode run.
+The grid spans 1D, 2D, and 3D extents (``--extents 4096 64x64 16x16x16``
+syntax) so the ND planning work — fused rank-2 kernel vs separable per-axis
+application with its swapaxes traffic — shows up in the trajectory.
 Throughput is complex-signal GiB/s moved at the *algorithmic minimum* of
 one HBM read + one write — so a fused one-pass kernel scores its real
 bandwidth while a log-N staged backend is penalized for its extra passes,
@@ -24,27 +27,34 @@ import time
 
 import numpy as np
 
-DEFAULT_EXTENTS = (1 << 10, 1 << 12, 1 << 14, 1 << 16)
-SMOKE_EXTENTS = (1 << 8, 1 << 10)
+DEFAULT_EXTENTS = ("1024", "4096", "16384", "65536",        # 1D
+                   "64x64", "256x256",                      # 2D (fft2 range)
+                   "32x32x32")                              # 3D
+SMOKE_EXTENTS = ("256", "1024", "16x16", "8x8x8")
 
 DEFAULT_BACKENDS = ("xla", "stockham", "fourstep", "fourstep_pallas",
-                    "stockham_pallas", "sixstep", "bluestein")
+                    "stockham_pallas", "sixstep", "fft2_pallas", "bluestein")
 
 
-def bench_backend(backend: str, n: int, batch: int, reps: int,
-                  warmups: int) -> dict:
+def bench_backend(backend: str, extents: tuple[int, ...], batch: int,
+                  reps: int, warmups: int) -> dict:
     import jax
     from repro.core.client import Problem
-    from repro.core.plan import Candidate
+    from repro.core.plan import Candidate, backend_supports
     from repro.core.clients.jax_fft import build_forward
 
-    problem = Problem((n,), "Outplace_Complex", "float", batch=batch)
-    rec = {"backend": backend, "extent": n, "batch": batch}
+    problem = Problem(extents, "Outplace_Complex", "float", batch=batch)
+    rec = {"backend": backend, "extent": "x".join(map(str, extents)),
+           "rank": len(extents), "batch": batch}
+    if not backend_supports(backend, problem):
+        rec.update(ok=False, error="unsupported extents/rank")
+        return rec
     try:
         fn = build_forward(problem, Candidate(backend))
         rng = np.random.default_rng(0)
-        x = (rng.standard_normal((batch, n)) +
-             1j * rng.standard_normal((batch, n))).astype(np.complex64)
+        shape = (batch, *extents)
+        x = (rng.standard_normal(shape) +
+             1j * rng.standard_normal(shape)).astype(np.complex64)
         xd = jax.device_put(x)
         t0 = time.perf_counter()
         jax.block_until_ready(fn(xd))
@@ -67,9 +77,10 @@ def bench_backend(backend: str, n: int, batch: int, reps: int,
 
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--out", default="BENCH_PR3.json")
+    p.add_argument("--out", default="BENCH_PR4.json")
     p.add_argument("--backends", nargs="+", default=list(DEFAULT_BACKENDS))
-    p.add_argument("--extents", nargs="+", type=int, default=None)
+    p.add_argument("--extents", nargs="+", default=None,
+                   help="extent specs like 4096 64x64 16x16x16")
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--reps", type=int, default=5)
     p.add_argument("--warmups", type=int, default=1)
@@ -82,6 +93,9 @@ def main(argv=None) -> int:
     else:
         extents = list(args.extents or DEFAULT_EXTENTS)
         reps, warmups = args.reps, args.warmups
+
+    from repro.core.extents import parse_extents
+    grid = [parse_extents(str(e)) for e in extents]
 
     import jax
     dev = jax.devices()[0]
@@ -99,13 +113,13 @@ def main(argv=None) -> int:
         },
         "results": [],
     }
-    for n in extents:
+    for ext in grid:
         for backend in args.backends:
-            rec = bench_backend(backend, n, args.batch, reps, warmups)
+            rec = bench_backend(backend, ext, args.batch, reps, warmups)
             doc["results"].append(rec)
             status = (f"{rec['time_ms']:9.3f} ms  {rec['gib_per_s']:7.2f} GiB/s"
                       if rec["ok"] else f"infeasible: {rec['error']}")
-            print(f"n=2^{n.bit_length()-1:<3} {backend:16s} {status}")
+            print(f"{rec['extent']:>12s} {backend:16s} {status}")
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=1)
         f.write("\n")
