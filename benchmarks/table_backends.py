@@ -29,6 +29,13 @@ SPECS = {
                     extents=("16x16x16", "32x32x32"),
                     kinds=("Outplace_Real",), precisions=("float",),
                     warmups=1, plan_cache=False, output=None),
+    # non-pow2 classes: mixed-radix kernel on radix357, fused chirp-Z on
+    # oddshape, vs the vendor path and the staged jnp chirp baseline
+    "nonpow2": SuiteSpec(clients=("XlaFFT", "StockhamPallas",
+                                  "ChirpZPallas", "Bluestein"),
+                         extents=("3072", str(19 ** 3)),
+                         kinds=("Outplace_Real",), precisions=("float",),
+                         warmups=1, plan_cache=False, output=None),
 }
 
 

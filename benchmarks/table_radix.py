@@ -10,7 +10,7 @@ from repro.core.extents import classify
 from repro.core.suite import SuiteSpec
 from .common import emit, run_suite
 
-SPEC = SuiteSpec(clients=("XlaFFT", "Planned"),
+SPEC = SuiteSpec(clients=("XlaFFT", "Planned", "ChirpZPallas"),
                  extents=("1024", "960", str(19 * 19),        # 1D per class
                           "16x16x16", "12x12x12", "19x19x19"),
                  kinds=("Outplace_Real",), precisions=("float",),

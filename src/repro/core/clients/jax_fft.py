@@ -16,7 +16,14 @@ Backend map (DESIGN.md §2):
                    column stages on one resident n1 x n2 tile — the whole
                    2D transform in one HBM touch (knobs: tile_b, radix)
   dft              direct matmul DFT Pallas kernel (tiny extents)
-  bluestein        chirp-Z (any size)
+  chirpz_pallas    fused chirp-Z: host-cached chirp + filter spectrum, the
+                   two padded pow2 transforms through the fused Pallas
+                   engines (knobs: engine, tile_b) — the fast oddshape path
+  bluestein        chirp-Z on the staged jnp engine (any size, baseline)
+
+The mixed-radix stockham_pallas kernel covers the paper's radix357 class
+(any 2^a*3^b*5^c*7^d length) in a single HBM touch; chirpz_pallas covers
+oddshape, so all three Fig. 7 extent classes ride fused kernels.
 
 Plans are ND-native: a candidate may assign a different backend to every
 axis (``Candidate.axes``); separable engines are applied per axis through
@@ -64,7 +71,16 @@ def _engine(cand: Candidate) -> Callable:
     if b == "fourstep":
         return fourstep.fft
     if b == "bluestein":
-        return bluestein.fft
+        return bluestein.fft   # staged jnp chirp-Z baseline
+    if b == "chirpz_pallas":
+        opts = cand.opts()
+        engine = opts.get("engine", "auto")
+        tile_b = opts.get("tile_b")
+        interp = not _on_tpu()
+        return lambda x, inverse=False: bluestein.fft(x, inverse=inverse,
+                                                      engine=engine,
+                                                      tile_b=tile_b,
+                                                      interpret=interp)
     if b == "fourstep_pallas":
         from repro.kernels.fft4step import ops as fs_ops
         tile_b = cand.opts().get("tile_b", 8)
@@ -382,6 +398,12 @@ class SixStepClient(JaxFFTClient):
 class Fft2PallasClient(JaxFFTClient):
     title = "Fft2Pallas"
     backend_filter = "fft2_pallas"
+
+
+@register_client()
+class ChirpZPallasClient(JaxFFTClient):
+    title = "ChirpZPallas"
+    backend_filter = "chirpz_pallas"
 
 
 @register_client()

@@ -36,6 +36,26 @@ def _factors_only(n: int, primes: Sequence[int]) -> bool:
     return n == 1
 
 
+def next_pow2(v: int) -> int:
+    """Smallest power of two >= v (shared by the planner's cost model and
+    the pow2-padded convolution engines)."""
+    m = 1
+    while m < v:
+        m *= 2
+    return m
+
+
+def next_smooth(v: int, primes: Sequence[int] = (2, 3, 5, 7)) -> int:
+    """Smallest integer >= v whose prime factors all lie in ``primes`` —
+    the padding helper for engines that accept any smooth length (the
+    mixed-radix Stockham kernel): a chirp-Z convolution at 7-smooth m
+    instead of next_pow2 can shrink the padded work by nearly 2x."""
+    v = max(1, v)
+    while not _factors_only(v, primes):
+        v += 1
+    return v
+
+
 def classify(ext: Sequence[int]) -> str:
     """Paper extent classes: powerof2 | radix357 | oddshape."""
     if all(v & (v - 1) == 0 for v in ext):

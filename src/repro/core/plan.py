@@ -24,6 +24,7 @@ from typing import Any, Callable, Sequence
 import numpy as np
 
 from .client import Problem
+from .extents import _factors_only, next_pow2 as _next_pow2, next_smooth
 
 
 class PlanRigor(enum.Enum):
@@ -188,10 +189,14 @@ def _pow2(n: int) -> bool:
 
 
 def _smooth(n: int) -> bool:
-    for p in (2, 3, 5, 7, 11, 13):
-        while n % p == 0:
-            n //= p
-    return n == 1
+    return n >= 1 and _factors_only(n, (2, 3, 5, 7, 11, 13))
+
+
+def _smooth7(n: int) -> bool:
+    """2^a*3^b*5^c*7^d — the extents the mixed-radix Stockham kernel
+    factors (paper's powerof2 + radix357 classes; shares the extent
+    classifier's ``_factors_only``)."""
+    return n >= 1 and _factors_only(n, (2, 3, 5, 7))
 
 
 #: Feasibility caps for the fused kernel paths (see the kernel modules).
@@ -201,6 +206,9 @@ STOCKHAM_PALLAS_VMEM_N = 1 << 15         # fits a useful batch tile in VMEM
 SIXSTEP_MIN_N, SIXSTEP_MAX_N = 4, 1 << 24
 FFT2_PALLAS_MAX_ELEMS = 1 << 18          # fft2 ops.MAX_ELEMS: hard cap
 FFT2_PALLAS_VMEM_ELEMS = 1 << 16         # n1*n2 tile fits the VMEM budget
+#: Largest chirp-Z length whose padded transform (next_pow2(2n-1)) still
+#: fits the six-step composition's SIXSTEP_MAX_N = 2^24.
+CHIRPZ_PALLAS_MAX_N = 1 << 23
 
 #: Whole-transform backends: one engine call covers every axis, so the
 #: separable path's swapaxes traffic never happens.
@@ -208,13 +216,17 @@ FUSED_ND = ("xla", "fft2_pallas")
 
 #: Every backend the planner knows, in enumeration (preference-tie) order.
 BACKENDS = ("xla", "stockham", "fourstep", "dft", "fourstep_pallas",
-            "stockham_pallas", "sixstep", "fft2_pallas", "bluestein")
+            "stockham_pallas", "sixstep", "fft2_pallas", "chirpz_pallas",
+            "bluestein")
 
 
 def axis_feasible(backend: str, n: int) -> bool:
     """Can ``backend`` transform one batched axis of extent ``n``?  This is
-    the engine-level contract: the length the cfft actually receives (for
-    the packed r2c innermost axis that is n//2, see ``axis_engine_n``)."""
+    the engine-level contract: the length the cfft actually receives — n//2
+    for the packed r2c innermost axis of an EVEN real extent, the full
+    length for an odd one, see ``axis_engine_n``.  The chirp backends are
+    the any-length catch-all, so odd-length real kinds explicitly route to
+    the full-complex chirp path rather than a meaningless packed half."""
     if backend in ("xla", "bluestein"):
         return True
     if backend == "stockham":
@@ -226,7 +238,10 @@ def axis_feasible(backend: str, n: int) -> bool:
     if backend == "fourstep_pallas":
         return _kernel_factorable(n)
     if backend == "stockham_pallas":
-        return _pow2(n) and n <= STOCKHAM_PALLAS_MAX_N
+        return _smooth7(n) and n <= STOCKHAM_PALLAS_MAX_N
+    if backend == "chirpz_pallas":
+        # any length whose padded pow2 transform the fused engines cover
+        return 1 <= n <= CHIRPZ_PALLAS_MAX_N
     if backend == "sixstep":
         # the engine falls back to the fused Stockham kernel below
         # SIXSTEP_MIN_N (packed-real halves can land there)
@@ -279,17 +294,20 @@ def candidates(problem: Problem, patient: bool = False) -> list[Candidate]:
     fused rank-2 ``fft2_pallas`` kernel) and **per-axis assignments**
     (``Candidate.axes``) mixing backends across axes, pruned by the
     bytes-moved model.  ``patient=True`` widens the space with the fused
-    kernels' tunable knobs — batch tiles, the Stockham radix schedule, the
-    six-step n1*n2 split, the fft2 radix — the FFTW_PATIENT analogue of
-    searching algorithm *and* implementation parameters.
+    kernels' tunable knobs — batch tiles, the (mixed-)radix schedule, the
+    six-step n1*n2 split, the fft2 radix, the chirp-Z padded-engine choice
+    — the FFTW_PATIENT analogue of searching algorithm *and* implementation
+    parameters.
     """
     exts = problem.extents
     out: list[Candidate] = [Candidate("xla")]
-    for b in ("stockham", "fourstep", "dft", "fourstep_pallas",
-              "stockham_pallas", "sixstep", "fft2_pallas"):
+    # every backend — the chirp catch-alls included — goes through
+    # backend_supports, which evaluates feasibility at the ENGINE length:
+    # odd-length real kinds route to the full-complex chirp path (engine
+    # length n, not the even-only packed n//2) and caps apply there
+    for b in BACKENDS[1:]:
         if backend_supports(b, problem):
             out.append(Candidate(b))
-    out.append(Candidate("bluestein"))  # always feasible
     if problem.rank >= 2:
         out += _mixed_candidates(problem, limit=12 if patient else 6)
     if patient:
@@ -310,6 +328,24 @@ def candidates(problem: Problem, patient: bool = False) -> list[Candidate]:
                 for n1 in _sixstep_splits(exts[-1]):
                     extra.append(Candidate("sixstep", (("split_n1", n1),)))
                 extra.append(Candidate("sixstep", (("tile_b", 16),)))
+            elif c.backend == "chirpz_pallas":
+                # a forced engine applies to EVERY axis the separable path
+                # transforms, so gate each knob on every axis's engine
+                # length (_sixstep_splits rule: only emit knobs the engine
+                # actually honors, never ones that raise at build time)
+                eng_ns = [axis_engine_n(problem, i)
+                          for i in range(problem.rank)]
+                engines = []
+                if all(next_smooth(2 * v - 1) <= STOCKHAM_PALLAS_MAX_N
+                       for v in eng_ns):
+                    engines.append("stockham_pallas")  # smooth-m padding
+                if all(SIXSTEP_MIN_N <= _next_pow2(2 * v - 1)
+                       <= SIXSTEP_MAX_N for v in eng_ns):
+                    engines.append("sixstep")
+                for eng in engines:
+                    extra.append(Candidate("chirpz_pallas",
+                                           (("engine", eng),)))
+                extra.append(Candidate("chirpz_pallas", (("tile_b", 16),)))
             elif c.backend == "fft2_pallas":
                 for tb in (2, 8):
                     for radix in (4, 8):
@@ -390,7 +426,11 @@ def hbm_passes(backend: str, n: int) -> float:
     """
     inf = float("inf")
     if backend == "xla":
-        return 2.0      # vendor path: multi-stage but heavily fused
+        if _smooth7(n):
+            return 2.0  # vendor path: multi-stage but heavily fused
+        # non-smooth lengths send the vendor library down its own chirp
+        # fallback: ~3 fused transforms at the padded pow2 length
+        return 6.0 * (_next_pow2(2 * n - 1) / n)
     if backend == "stockham":
         if not _pow2(n):
             return inf
@@ -409,12 +449,24 @@ def hbm_passes(backend: str, n: int) -> float:
     if backend == "fourstep_pallas":
         return 1.0 if _kernel_factorable(n) else inf
     if backend == "stockham_pallas":
-        # beyond the VMEM tile budget the kernel can't hold a batch row
-        return 1.0 if _pow2(n) and n <= STOCKHAM_PALLAS_VMEM_N else inf
+        # any 7-smooth length is one mixed-radix kernel pass; beyond the
+        # VMEM tile budget the kernel can't hold a batch row
+        return 1.0 if _smooth7(n) and n <= STOCKHAM_PALLAS_VMEM_N else inf
     if backend == "sixstep":
         if _pow2(n) and SIXSTEP_MIN_N <= n <= SIXSTEP_MAX_N:
             return 5.0  # 2 fused kernel passes + 3 transpose passes
         return inf
+    if backend == "chirpz_pallas":
+        if not 1 <= n <= CHIRPZ_PALLAS_MAX_N:
+            return inf
+        # two fused padded transforms + chirp mul, filter mul, final chirp;
+        # the filter spectrum is host-cached so no third transform runs.
+        # The mixed-radix kernel convolves at the smallest 7-SMOOTH
+        # m >= 2n-1 (often ~2x tighter than pow2); sixstep needs pow2.
+        ms = next_smooth(2 * n - 1)
+        if ms <= STOCKHAM_PALLAS_VMEM_N:
+            return 5.0 * (ms / n)                 # 2*1 engine passes + 3
+        return 13.0 * (_next_pow2(2 * n - 1) / n)  # 2*5 sixstep passes + 3
     if backend == "bluestein":
         m = 1
         while m < 2 * n - 1:
@@ -456,7 +508,10 @@ def estimate_bytes_moved(problem: Problem, cand: Candidate) -> float:
     if cand.backend in FUSED_ND:
         elems = _axis_elems(problem, problem.rank - 1)
         if cand.backend == "xla":
-            passes = 2.0   # vendor path: multi-stage but heavily fused
+            # vendor path: 2 fused passes on smooth extents; a non-smooth
+            # axis drags the whole transform into its chirp fallback
+            passes = max(hbm_passes("xla", axis_engine_n(problem, i))
+                         for i in range(problem.rank))
         else:              # fft2_pallas: one read + one write of the tile
             # the VMEM budget binds the tile the kernel actually holds:
             # real kinds run packed, so the inner extent halves (even n)

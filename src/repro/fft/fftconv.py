@@ -18,12 +18,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-
-def _next_pow2(v: int) -> int:
-    m = 1
-    while m < v:
-        m *= 2
-    return m
+from repro.core.extents import next_pow2 as _next_pow2
 
 
 @partial(jax.jit, static_argnames=("backend",))

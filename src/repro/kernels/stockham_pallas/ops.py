@@ -1,5 +1,5 @@
-"""jit'd public wrapper for the stockham_pallas kernel: complex API, radix
-schedule + twiddle packing (host-side float64), batch tiling/padding,
+"""jit'd public wrapper for the stockham_pallas kernel: complex API, mixed-
+radix schedule + twiddle packing (host-side float64), batch tiling/padding,
 normalization."""
 
 from __future__ import annotations
@@ -10,7 +10,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .stockham_pallas import (DEFAULT_TILE_B, radix_schedule, stockham_pallas)
+from .stockham_pallas import (DEFAULT_TILE_B, radix_schedule, smooth7,
+                              stockham_pallas)
 
 #: Soft VMEM budget steering the default batch tile (in/out/stage planes;
 #: real VMEM is ~16 MiB/core, leave headroom for twiddles + double buffers).
@@ -72,16 +73,18 @@ def fft(x: jnp.ndarray, inverse: bool = False, *, tile_b: int | None = None,
         radix: int = 8, interpret: bool = False) -> jnp.ndarray:
     """Fused Stockham FFT along the last axis via the Pallas kernel.
 
-    Power-of-two lengths up to ``MAX_N``; all log-radix stages run on a
-    VMEM-resident batch tile, so the signal touches HBM once each way.
-    numpy semantics (inverse applies 1/n).  ``tile_b``/``radix`` are the
-    PATIENT-searchable knobs; ``tile_b=None`` sizes the tile to VMEM.
+    7-smooth (2^a*3^b*5^c*7^d) lengths up to ``MAX_N``; all mixed-radix
+    stages run on a VMEM-resident batch tile, so the signal touches HBM once
+    each way.  numpy semantics (inverse applies 1/n).  ``tile_b``/``radix``
+    are the PATIENT-searchable knobs (``radix`` sizes the pow2 work stages;
+    ``tile_b=None`` sizes the tile to VMEM).
     """
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
         x = x.astype(jnp.complex64)
     n = x.shape[-1]
-    if n & (n - 1):
-        raise ValueError(f"stockham_pallas requires power-of-two length, got {n}")
+    if not smooth7(n):
+        raise ValueError("stockham_pallas requires a 7-smooth "
+                         f"(2^a*3^b*5^c*7^d) length, got {n}")
     if n > MAX_N:
         raise ValueError(f"stockham_pallas caps at n={MAX_N}; "
                          "use the sixstep backend beyond that")

@@ -11,12 +11,12 @@ from .stockham_pallas import radix_schedule
 
 def stockham_ref(x: jnp.ndarray, radix: int = 8,
                  inverse: bool = False) -> jnp.ndarray:
-    """General-radix Stockham FFT along the last axis (power-of-two length).
+    """General-radix Stockham FFT along the last axis (7-smooth length).
 
-    Mirrors the kernel's stage schedule exactly — radix-``radix`` work
-    stages with a 4/2 cleanup — so kernel-vs-ref comparisons isolate the
-    Pallas lowering, not the factorization.  Forward unnormalized, inverse
-    applies 1/n (numpy semantics).
+    Mirrors the kernel's stage schedule exactly — radix-7/5/3 odd stages,
+    then radix-``radix`` work stages with a 4/2 cleanup — so kernel-vs-ref
+    comparisons isolate the Pallas lowering, not the factorization.
+    Forward unnormalized, inverse applies 1/n (numpy semantics).
     """
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
         x = x.astype(jnp.complex64)

@@ -5,7 +5,10 @@ round-trip per radix-2 stage — log2(N) passes over the signal, which is
 exactly the "memory-bound above 1 MiB" regime of the paper's Fig. 8.  This
 kernel runs *every* stage of the autosort chain on a VMEM-resident batch
 tile: the signal is read from HBM once, transformed through a static radix
-schedule (radix-8/4 work stages with a radix-2 cleanup), and written once.
+schedule (radix-3/5/7 work stages for the odd factors, then radix-8/4
+stages with a radix-2 cleanup for the power-of-two part), and written once.
+Any 7-smooth length n = 2^a * 3^b * 5^c * 7^d — the paper's powerof2 AND
+radix357 extent classes — is therefore a single HBM touch.
 
 Stage math (DIF Stockham, same derivation as the jnp module): with the
 buffer holding x[q + s*(p + m*t)] for a stage of size ``cur`` = r*m at
@@ -41,20 +44,42 @@ from jax.experimental import pallas as pl
 
 DEFAULT_TILE_B = 8
 
-#: Tunable radix schedules the planner may request (largest work stage).
+#: Tunable radix schedules the planner may request (largest pow2 work stage;
+#: odd factors always run as their own radix-3/5/7 stages).
 RADICES = (2, 4, 8)
+
+#: The prime factors the stage chain can express (paper's radix357 class).
+SMOOTH_PRIMES = (2, 3, 5, 7)
+
+
+def smooth7(n: int) -> bool:
+    """Is ``n`` of the form 2^a * 3^b * 5^c * 7^d (n >= 1)?"""
+    if n < 1:
+        return False
+    for p in SMOOTH_PRIMES:
+        while n % p == 0:
+            n //= p
+    return n == 1
 
 
 def radix_schedule(n: int, radix: int = 8) -> tuple[int, ...]:
-    """Static stage schedule for a power-of-two ``n``: ``radix`` work stages
-    then a single 4/2 cleanup (e.g. n=2^10, radix=8 -> (8, 8, 8, 2))."""
-    if n & (n - 1) or n < 1:
-        raise ValueError(f"stockham_pallas requires power-of-two n, got {n}")
+    """Static mixed-radix stage schedule for a 7-smooth ``n``: the odd prime
+    factors first as radix-7/5/3 work stages, then ``radix`` power-of-two
+    work stages with a single 4/2 cleanup (e.g. n=3*2^10, radix=8 ->
+    (3, 8, 8, 8, 2)).  The stage product is exactly ``n``."""
+    if not smooth7(n):
+        raise ValueError("stockham_pallas requires a 7-smooth "
+                         f"(2^a*3^b*5^c*7^d) length, got {n}")
     if radix not in RADICES:
         raise ValueError(f"radix must be one of {RADICES}, got {radix}")
-    k = n.bit_length() - 1
-    step = radix.bit_length() - 1
     out = []
+    m = n
+    for p in (7, 5, 3):
+        while m % p == 0:
+            out.append(p)
+            m //= p
+    k = m.bit_length() - 1
+    step = radix.bit_length() - 1
     while k >= step:
         out.append(radix)
         k -= step

@@ -35,6 +35,13 @@ from repro.core.clients.jax_fft import build_forward, build_inverse
 
 RANKS = sorted(SUPPORT_PROBE_EXTENTS)
 
+#: One small probe per non-pow2 extent class (paper Fig. 7): 12 = 2^2*3 is
+#: the radix357 canary (its packed real half, 6, is still 7-smooth), 19 the
+#: oddshape one.  Every backend claiming support at these extents gets at
+#: least one tier-1 cell per class, and the full matrix sweeps them across
+#: kinds x precisions.
+CLASS_PROBE_EXTENTS = {"radix357": (12,), "oddshape": (19,)}
+
 
 def check_cell(backend: str, problem: Problem,
                _verified: dict = {}) -> None:
@@ -91,11 +98,51 @@ def test_conformance(backend, rank, kind):
 
 
 # ---------------------------------------------------------------------------
+# fast non-pow2 extent classes (tier-1): radix357 + oddshape per backend
+# ---------------------------------------------------------------------------
+def _class_cells() -> list[tuple[str, str, str]]:
+    """For every backend and every non-pow2 extent class it claims support
+    for, one cell — kinds rotated with the backend index so real and
+    complex paths (and the odd-length full-complex fallback) all run."""
+    cells = []
+    for bi, backend in enumerate(BACKENDS):
+        for ci, (cls, ext) in enumerate(sorted(CLASS_PROBE_EXTENTS.items())):
+            for off in range(len(KINDS)):
+                kind = KINDS[(bi + ci + off) % len(KINDS)]
+                if backend_supports(backend, Problem(ext, kind, "float")):
+                    cells.append((backend, cls, kind))
+                    break
+    return cells
+
+
+def test_class_cells_cover_the_fused_nonpow2_paths():
+    """The new fast paths must claim (and therefore test) their classes:
+    the mixed-radix kernel on radix357, the fused chirp on both."""
+    covered = {(b, c) for b, c, _ in _class_cells()}
+    assert ("stockham_pallas", "radix357") in covered
+    assert ("chirpz_pallas", "radix357") in covered
+    assert ("chirpz_pallas", "oddshape") in covered
+    assert ("bluestein", "oddshape") in covered
+    assert ("xla", "oddshape") in covered
+
+
+@pytest.mark.parametrize("backend,cls,kind", _class_cells(),
+                         ids=lambda v: str(v))
+def test_conformance_extent_classes(backend, cls, kind):
+    check_cell(backend, Problem(CLASS_PROBE_EXTENTS[cls], kind, "float"))
+
+
+# ---------------------------------------------------------------------------
 # full matrix (CI conformance job: CONFORMANCE_FULL=1, slow marker)
 # ---------------------------------------------------------------------------
-def _full_cells() -> list[tuple[str, int, str, str]]:
-    return [(r["backend"], r["rank"], r["kind"], r["precision"])
-            for r in support_matrix() if r["supported"]]
+def _full_cells() -> list[tuple[str, tuple, str, str]]:
+    """Every supported (backend, extents, kind, precision) cell: the pow2
+    probes per rank plus one radix357 and one oddshape probe."""
+    rows = list(support_matrix())
+    for ext in CLASS_PROBE_EXTENTS.values():
+        rows += support_matrix(probes={len(ext): ext})
+    return [(r["backend"], r["extents"], r["kind"], r["precision"])
+            for r in rows if r["supported"]]
 
 
 @pytest.mark.slow
@@ -105,12 +152,12 @@ def test_conformance_full_matrix():
                     "CONFORMANCE_FULL=1 (the dedicated CI job step runs it)")
     failures = []
     cells = _full_cells()
-    for backend, rank, kind, precision in cells:
-        problem = Problem(SUPPORT_PROBE_EXTENTS[rank], kind, precision)
+    for backend, extents, kind, precision in cells:
+        problem = Problem(extents, kind, precision)
         try:
             check_cell(backend, problem)
         except Exception as e:  # a raising cell must not abort the sweep:
-            # the whole point is the aggregated N/200 failure report
+            # the whole point is the aggregated N/M failure report
             failures.append(f"{backend}/{problem.signature()}: "
                             f"{type(e).__name__}: {e}")
     assert not failures, \
@@ -146,6 +193,9 @@ def test_support_matrix_is_kind_and_precision_blind_at_pow2_probes():
 def test_full_matrix_spans_all_dimensions():
     cells = _full_cells()
     assert {c[0] for c in cells} == set(BACKENDS)
-    assert {c[1] for c in cells} == set(RANKS)
+    assert {len(c[1]) for c in cells} == set(RANKS)
     assert {c[2] for c in cells} == set(KINDS)
     assert {c[3] for c in cells} == set(PRECISIONS)
+    # both non-pow2 class probes contribute supported cells
+    exts = {c[1] for c in cells}
+    assert set(CLASS_PROBE_EXTENTS.values()) <= exts

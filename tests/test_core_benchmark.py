@@ -54,8 +54,11 @@ def test_measure_plan_picks_feasible():
     problem = Problem((256,), "Outplace_Complex", "float")
     plan = make_plan(problem, PlanRigor.MEASURE,
                      build=lambda c: jf.build_forward(problem, c))
+    # MEASURE picks by wall time: any feasible backend at n=256 may win
     assert plan.candidate.backend in {"xla", "stockham", "fourstep",
-                                      "fourstep_pallas", "dft", "bluestein"}
+                                      "fourstep_pallas", "stockham_pallas",
+                                      "sixstep", "chirpz_pallas", "dft",
+                                      "bluestein"}
     assert plan.plan_time_ms > 0
     assert any(v == v for v in plan.measured_ms.values())  # some finite timing
 

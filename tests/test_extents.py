@@ -7,7 +7,7 @@ import math
 import pytest
 
 from repro.core.extents import (SWEEP_CLASSES, classify, format_extents,
-                                oddshape_extents, parse_extents,
+                                next_smooth, oddshape_extents, parse_extents,
                                 powerof2_extents, radix357_extents,
                                 sweep_extents, total_elems)
 
@@ -113,3 +113,16 @@ def test_sweep_extents_errors():
         sweep_extents("oddshape", 1, start=5)         # start is radix357-only
     with pytest.raises(ValueError, match="rank"):
         sweep_extents("powerof2", 4, min_exp=1, max_exp=2)
+
+
+def test_next_smooth():
+    """Smallest 7-smooth integer >= v (the chirp-Z padding helper)."""
+    assert next_smooth(1) == 1 and next_smooth(0) == 1
+    assert next_smooth(37) == 40
+    assert next_smooth(721) == 729                  # 3^6, beats pow2 1024
+    assert next_smooth(13717) == 13720              # 2^3 * 5 * 7^3
+    assert next_smooth(36863) == 36864              # vs next_pow2 = 65536
+    for v in (2, 17, 100, 1000, 54321):
+        m = next_smooth(v)
+        assert m >= v and classify((m,)) in ("powerof2", "radix357")
+    assert next_smooth(31, primes=(2,)) == 32       # custom prime set

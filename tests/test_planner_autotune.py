@@ -27,10 +27,27 @@ def test_new_backends_offered_for_all_pow2_up_to_2_20():
     # rank-3 pow2 (per-axis feasibility)
     backs = {c.backend for c in candidates(Problem((16, 16, 16)))}
     assert {"stockham_pallas", "sixstep"} <= backs
-    # non-pow2 and too-small axes are excluded
+    # non-smooth and too-small axes are excluded
     assert "stockham_pallas" not in {
-        c.backend for c in candidates(Problem((100,)))}
+        c.backend for c in candidates(Problem((97,)))}
     assert "sixstep" not in {c.backend for c in candidates(Problem((2,)))}
+
+
+def test_mixed_radix_and_chirpz_offered_for_nonpow2():
+    """The paper's radix357 and oddshape classes are first-class: 7-smooth
+    lengths get the mixed-radix fused kernel, everything gets the fused
+    chirp-Z (up to its padded six-step cap)."""
+    for n in (12, 100, 3072, 18432):          # radix357
+        backs = {c.backend for c in candidates(Problem((n,),
+                                                       "Outplace_Complex"))}
+        assert "stockham_pallas" in backs, n
+        assert "chirpz_pallas" in backs, n
+    for n in (19, 361, 6859):                 # oddshape
+        backs = {c.backend for c in candidates(Problem((n,),
+                                                       "Outplace_Complex"))}
+        assert "stockham_pallas" not in backs, n
+        assert "chirpz_pallas" in backs, n
+        assert "bluestein" in backs, n
 
 
 def test_sixstep_split_knobs_are_honored_by_engine():
@@ -73,7 +90,30 @@ def test_hbm_passes_model():
     assert math.isinf(hbm_passes("stockham_pallas",
                                  STOCKHAM_PALLAS_VMEM_N * 2))
     assert math.isinf(hbm_passes("fourstep_pallas", 1 << 15))
-    assert math.isinf(hbm_passes("stockham_pallas", 100))  # non-pow2
+    assert math.isinf(hbm_passes("stockham_pallas", 97))   # not 7-smooth
+    # mixed radix: any 7-smooth length is still a single touch
+    assert hbm_passes("stockham_pallas", 100) == 1.0
+    assert hbm_passes("stockham_pallas", 3072) == 1.0
+    assert hbm_passes("stockham_pallas", 18432) == 1.0
+
+
+def test_hbm_passes_chirpz_model():
+    # n=6859 convolves on the mixed-radix kernel at the smallest 7-smooth
+    # m >= 2n-1 (13720 = 2^3*5*7^3, tighter than pow2 16384):
+    # (2*1 engine passes + 3 pointwise) * m/n
+    assert hbm_passes("chirpz_pallas", 6859) == \
+        pytest.approx(5.0 * 13720 / 6859)
+    # past the VMEM tile budget the padded transforms ride sixstep (5
+    # passes each) at the pow2 padding
+    n_big = (1 << 15) + 1                 # pow2 m = 2^17
+    assert hbm_passes("chirpz_pallas", n_big) == \
+        pytest.approx(13.0 * (1 << 17) / n_big)
+    assert math.isinf(hbm_passes("chirpz_pallas", (1 << 23) + 1))
+    # the vendor path pays its own modeled chirp fallback on non-smooth n
+    assert hbm_passes("xla", 1 << 12) == 2.0
+    assert hbm_passes("xla", 6859) == pytest.approx(6.0 * (1 << 14) / 6859)
+    # ...which the fused chirp undercuts
+    assert hbm_passes("chirpz_pallas", 6859) < hbm_passes("xla", 6859)
 
 
 def test_estimate_bytes_moved_scales():
@@ -103,6 +143,52 @@ def test_estimate_choice_uses_model():
         "fourstep_pallas", "stockham_pallas")
     # beyond every fused kernel's reach the vendor path wins again
     assert estimate_choice(Problem((1 << 18,))).backend == "xla"
+
+
+def test_estimate_pins_nonpow2_classes():
+    """Acceptance pins: radix357 and oddshape extents plan onto fused
+    Pallas paths, never the xla / jnp-bluestein fallbacks."""
+    fused = ("stockham_pallas", "fourstep_pallas", "chirpz_pallas")
+    for kind in ("Outplace_Complex", "Outplace_Real"):
+        # radix357 (e.g. 3072 = 3*2^10): one-touch mixed-radix territory
+        assert estimate_choice(Problem((3072,), kind)).backend in fused
+        assert estimate_choice(Problem((18432,), kind)).backend in fused
+        # oddshape (e.g. 6859 = 19^3): the fused chirp-Z
+        assert estimate_choice(
+            Problem((6859,), kind)).backend == "chirpz_pallas"
+    # past the fourstep kernel's 16384 cap only the mixed-radix kernel
+    # offers a single touch, so the pick is specific
+    assert estimate_choice(
+        Problem((18432,), "Outplace_Complex")).backend == "stockham_pallas"
+
+
+def test_patient_sweeps_chirpz_knobs():
+    cands = candidates(Problem((6859,), "Outplace_Complex"), patient=True)
+    keys = {c.key() for c in cands}
+    assert "chirpz_pallas(engine=stockham_pallas)" in keys
+    assert "chirpz_pallas(engine=sixstep)" in keys
+    assert "chirpz_pallas(tile_b=16)" in keys
+    assert len(keys) == len(cands)  # no duplicate candidates
+
+
+def test_patient_chirpz_engine_knob_honors_every_axis():
+    """A forced chirp engine applies to every axis of a separable ND plan,
+    so a knob is only emitted when ALL axes' padded lengths fit it — a
+    (2^21, 100) problem pads axis 0 to 2^22 > the stockham_pallas cap,
+    which must exclude that engine (and keep sixstep, which covers 2^22)."""
+    cands = candidates(Problem((1 << 21, 100), "Outplace_Complex"),
+                       patient=True)
+    keys = {c.key() for c in cands}
+    assert "chirpz_pallas(engine=stockham_pallas)" not in keys
+    assert "chirpz_pallas(engine=sixstep)" in keys
+    # every emitted chirp engine knob must actually build (no raise)
+    from repro.fft.bluestein import resolve_engine
+    for c in cands:
+        if c.backend == "chirpz_pallas" and "engine" in c.opts():
+            for ax_n in (1 << 21, 100):
+                eng, m = resolve_engine(ax_n, c.opts()["engine"])
+                if eng == "stockham_pallas":
+                    assert m <= 1 << 20, (c.key(), ax_n, m)
 
 
 # --------------------------------------------------------------------------

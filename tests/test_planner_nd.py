@@ -31,25 +31,29 @@ def homogeneous_backends(problem, patient=False):
 def test_golden_candidates_rank1_pow2():
     assert homogeneous_backends(Problem((64,), "Outplace_Complex")) == [
         "xla", "stockham", "fourstep", "dft", "fourstep_pallas",
-        "stockham_pallas", "sixstep", "bluestein"]
+        "stockham_pallas", "sixstep", "chirpz_pallas", "bluestein"]
 
 
 def test_golden_candidates_rank1_smooth():
-    # 100 = 2^2 * 5^2: smooth and 10x10-factorable but not pow2
+    # 100 = 2^2 * 5^2: 7-smooth (mixed-radix fused kernel applies) and
+    # 10x10-factorable, but not pow2
     assert homogeneous_backends(Problem((100,), "Outplace_Complex")) == [
-        "xla", "fourstep", "dft", "fourstep_pallas", "bluestein"]
+        "xla", "fourstep", "dft", "fourstep_pallas", "stockham_pallas",
+        "chirpz_pallas", "bluestein"]
 
 
 def test_golden_candidates_rank1_prime():
-    # 97: prime; dft and the single-pass fft4step (97 x 1) still apply
+    # 97: prime; dft, the single-pass fft4step (97 x 1) and the chirp
+    # paths still apply
     assert homogeneous_backends(Problem((97,), "Outplace_Complex")) == [
-        "xla", "dft", "fourstep_pallas", "bluestein"]
+        "xla", "dft", "fourstep_pallas", "chirpz_pallas", "bluestein"]
 
 
 def test_golden_candidates_rank2_pow2_offers_fft2():
     got = homogeneous_backends(Problem((8, 16), "Outplace_Complex"))
     assert got == ["xla", "stockham", "fourstep", "dft", "fourstep_pallas",
-                   "stockham_pallas", "sixstep", "fft2_pallas", "bluestein"]
+                   "stockham_pallas", "sixstep", "fft2_pallas",
+                   "chirpz_pallas", "bluestein"]
     # the fused rank-2 kernel is rank-2 only and VMEM-capped
     assert "fft2_pallas" not in homogeneous_backends(
         Problem((16,), "Outplace_Complex"))
@@ -117,7 +121,8 @@ def test_per_axis_knobs_survive_in_plan():
 # cost-model sanity
 # --------------------------------------------------------------------------
 def test_bytes_moved_monotone_in_n():
-    for backend in ("xla", "stockham", "stockham_pallas", "bluestein"):
+    for backend in ("xla", "stockham", "stockham_pallas", "chirpz_pallas",
+                    "bluestein"):
         costs = [estimate_bytes_moved(Problem((1 << e,), "Outplace_Complex"),
                                       Candidate(backend))
                  for e in range(2, 15)]
@@ -187,6 +192,33 @@ def test_backend_supports_respects_packed_length():
     # the engine falls back to the fused kernel there, so support holds
     assert backend_supports("sixstep", Problem((4,), "Outplace_Real"))
     assert not backend_supports("sixstep", Problem((2,), "Outplace_Real"))
+
+
+def test_odd_length_real_kinds_route_to_full_complex_chirp():
+    """The packed r2c trick only exists for even n: an odd-length real kind
+    plans at the FULL extent, on the full-complex chirp path — feasibility,
+    caps, and the cost model all see n, never a meaningless n//2."""
+    p = Problem((6859,), "Outplace_Real")
+    assert axis_engine_n(p, 0) == 6859              # full length, not 3429
+    backs = [c.backend for c in candidates(p) if not c.axes]
+    assert "chirpz_pallas" in backs and "bluestein" in backs
+    # the chirp candidates enter through backend_supports like everyone
+    # else (no unconditional append), so the cap binds at the full length:
+    # an odd n past CHIRPZ_PALLAS_MAX_N keeps only the jnp chirp
+    from repro.core.plan import CHIRPZ_PALLAS_MAX_N
+    p_big = Problem(((CHIRPZ_PALLAS_MAX_N + 1),), "Outplace_Real")
+    assert not backend_supports("chirpz_pallas", p_big)
+    assert backend_supports("bluestein", p_big)
+    assert "chirpz_pallas" not in [c.backend for c in candidates(p_big)]
+    assert "bluestein" in [c.backend for c in candidates(p_big)]
+    # the model charges full-length traffic for the odd real extent (the
+    # even neighbor runs packed at half the elements)
+    odd = estimate_bytes_moved(p, Candidate("bluestein"))
+    even = estimate_bytes_moved(Problem((6860,), "Outplace_Real"),
+                                Candidate("bluestein"))
+    assert odd > even
+    # and the ESTIMATE pick lands on the fused chirp, not xla/jnp-bluestein
+    assert estimate_choice(p).backend == "chirpz_pallas"
 
 
 # --------------------------------------------------------------------------

@@ -40,9 +40,28 @@ def test_radix_schedule():
             prod *= r
         assert prod == n
     with pytest.raises(ValueError):
-        radix_schedule(100, 8)
+        radix_schedule(97, 8)       # not 7-smooth
+    with pytest.raises(ValueError):
+        radix_schedule(88, 8)       # 8 * 11: 11 is not a stage radix
     with pytest.raises(ValueError):
         radix_schedule(64, 16)
+
+
+def test_radix_schedule_mixed():
+    """Odd prime factors become their own radix-7/5/3 work stages ahead of
+    the pow2 chain; the stage product is always exactly n."""
+    assert radix_schedule(3072, 8) == (3, 8, 8, 8, 2)   # 3 * 2^10
+    assert radix_schedule(12, 8) == (3, 4)
+    assert radix_schedule(100, 8) == (5, 5, 4)
+    assert radix_schedule(945, 8) == (7, 5, 3, 3, 3)    # odd-only length
+    assert radix_schedule(3, 8) == (3,)
+    for n in (6, 60, 360, 1050, 18432):
+        sched = radix_schedule(n)
+        prod = 1
+        for r in sched:
+            prod *= r
+        assert prod == n
+        assert all(r in (2, 3, 4, 5, 7, 8) for r in sched)
 
 
 # --------------------------------------------------------------------------
@@ -78,6 +97,35 @@ def test_ops_accuracy_c64(n):
     assert rel_l2(got, np.fft.fft(x, axis=-1)) < 1e-3
 
 
+# --------------------------------------------------------------------------
+# mixed radix (the paper's radix357 class): one HBM touch for 7-smooth n
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [3, 12, 45, 100, 360, 3072])
+@pytest.mark.parametrize("inverse", [False, True])
+def test_mixed_radix_matches_ref_and_numpy(n, inverse):
+    x = rc((3, n))
+    want_np = np.fft.ifft(x, axis=-1) if inverse else np.fft.fft(x, axis=-1)
+    ref = stockham_ref(jnp.asarray(x), inverse=inverse)
+    got = sp_ops.fft(jnp.asarray(x), inverse=inverse, interpret=True)
+    assert rel_l2(ref, want_np) < 1e-3
+    assert rel_l2(got, want_np) < 1e-3
+
+
+def test_mixed_radix_c128_and_radix_knob():
+    x = rc((2, 972), np.complex128)          # 2^2 * 3^5
+    for radix in (2, 4, 8):
+        got = sp_ops.fft(jnp.asarray(x), radix=radix, interpret=True)
+        assert np.asarray(got).dtype == np.complex128
+        assert rel_l2(got, np.fft.fft(x, axis=-1)) < 1e-8
+
+
+def test_mixed_radix_roundtrip_and_batching():
+    x = rc((5, 1050))                        # 2 * 3 * 5^2 * 7, padded tile
+    y = sp_ops.fft(jnp.asarray(x), tile_b=4, interpret=True)
+    back = sp_ops.fft(y, inverse=True, tile_b=4, interpret=True)
+    assert rel_l2(back, x) < 1e-3
+
+
 @pytest.mark.parametrize("n", [16, 2048, 1 << 15])
 def test_ops_accuracy_c128(n):
     x = rc((2, n), np.complex128)
@@ -104,8 +152,10 @@ def test_ops_rank2_via_nd():
 
 
 def test_ops_rejects_bad_lengths():
-    with pytest.raises(ValueError, match="power-of-two"):
-        sp_ops.fft(jnp.asarray(rc((2, 100))), interpret=True)
+    with pytest.raises(ValueError, match="7-smooth"):
+        sp_ops.fft(jnp.asarray(rc((2, 97))), interpret=True)
+    with pytest.raises(ValueError, match="7-smooth"):
+        sp_ops.fft(jnp.asarray(rc((2, 19 * 19))), interpret=True)
     with pytest.raises(ValueError, match="sixstep"):
         sp_ops.fft(jnp.asarray(rc((1, 1 << 21))), interpret=True)
 

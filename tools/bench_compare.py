@@ -11,7 +11,10 @@ and writes one JSON document:
 ``--smoke`` shrinks the grid/reps to seconds for the CI interpret-mode run.
 The grid spans 1D, 2D, and 3D extents (``--extents 4096 64x64 16x16x16``
 syntax) so the ND planning work — fused rank-2 kernel vs separable per-axis
-application with its swapaxes traffic — shows up in the trajectory.
+application with its swapaxes traffic — shows up in the trajectory, and all
+three paper extent classes (powerof2, radix357 rows like 3072, oddshape
+rows like 6859 = 19^3) so the mixed-radix kernel and the fused chirp-Z
+path are measured against the xla / jnp-bluestein fallbacks they replace.
 Throughput is complex-signal GiB/s moved at the *algorithmic minimum* of
 one HBM read + one write — so a fused one-pass kernel scores its real
 bandwidth while a log-N staged backend is penalized for its extra passes,
@@ -27,25 +30,30 @@ import time
 
 import numpy as np
 
-DEFAULT_EXTENTS = ("1024", "4096", "16384", "65536",        # 1D
+DEFAULT_EXTENTS = ("1024", "4096", "16384", "65536",        # 1D powerof2
+                   "3072", "18432",                         # 1D radix357
+                   "6859",                                  # 1D oddshape 19^3
                    "64x64", "256x256",                      # 2D (fft2 range)
                    "32x32x32")                              # 3D
-SMOKE_EXTENTS = ("256", "1024", "16x16", "8x8x8")
+SMOKE_EXTENTS = ("256", "1024", "12", "19", "16x16", "8x8x8")
 
 DEFAULT_BACKENDS = ("xla", "stockham", "fourstep", "fourstep_pallas",
-                    "stockham_pallas", "sixstep", "fft2_pallas", "bluestein")
+                    "stockham_pallas", "sixstep", "fft2_pallas",
+                    "chirpz_pallas", "bluestein")
 
 
 def bench_backend(backend: str, extents: tuple[int, ...], batch: int,
                   reps: int, warmups: int) -> dict:
     import jax
     from repro.core.client import Problem
+    from repro.core.extents import classify
     from repro.core.plan import Candidate, backend_supports
     from repro.core.clients.jax_fft import build_forward
 
     problem = Problem(extents, "Outplace_Complex", "float", batch=batch)
     rec = {"backend": backend, "extent": "x".join(map(str, extents)),
-           "rank": len(extents), "batch": batch}
+           "rank": len(extents), "batch": batch,
+           "class": classify(extents)}
     if not backend_supports(backend, problem):
         rec.update(ok=False, error="unsupported extents/rank")
         return rec
@@ -77,7 +85,7 @@ def bench_backend(backend: str, extents: tuple[int, ...], batch: int,
 
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--out", default="BENCH_PR4.json")
+    p.add_argument("--out", default="BENCH_PR5.json")
     p.add_argument("--backends", nargs="+", default=list(DEFAULT_BACKENDS))
     p.add_argument("--extents", nargs="+", default=None,
                    help="extent specs like 4096 64x64 16x16x16")
