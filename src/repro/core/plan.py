@@ -43,11 +43,18 @@ class Candidate:
     non-empty — a **per-axis assignment**: ``axes[i]`` transforms
     ``extents[i]`` (outermost first), each with its own backend and knobs.
     Per-axis candidates carry the placeholder backend ``'nd'``.
+
+    Distributed candidates (:data:`DIST_BACKENDS`) additionally carry the
+    **mesh shape** they decompose over — ``('slab', mesh=(4,))`` renders as
+    ``slab[4]``, ``('pencil', mesh=(2, 4))`` as ``pencil[2x4]`` — because a
+    selection tuned for one device count is meaningless for another, in
+    plan-cache keys and in wisdom alike.
     """
 
-    backend: str          # 'xla' | 'stockham' | ... | 'fft2_pallas' | 'nd'
+    backend: str          # 'xla' | 'stockham' | ... | 'slab' | 'nd'
     options: tuple[tuple[str, Any], ...] = ()
     axes: tuple["Candidate", ...] = ()   # per-axis assignment (ND-native)
+    mesh: tuple[int, ...] = ()           # device-mesh shape (distributed)
 
     def opts(self) -> dict[str, Any]:
         return dict(self.options)
@@ -66,8 +73,11 @@ class Candidate:
     def key(self) -> str:
         if self.axes:
             return "nd[" + ";".join(a.key() for a in self.axes) + "]"
+        base = self.backend
+        if self.mesh:
+            base += "[" + "x".join(str(s) for s in self.mesh) + "]"
         o = ",".join(f"{k}={v}" for k, v in self.options)
-        return f"{self.backend}({o})" if o else self.backend
+        return f"{base}({o})" if o else base
 
 
 @dataclass
@@ -219,6 +229,26 @@ BACKENDS = ("xla", "stockham", "fourstep", "dft", "fourstep_pallas",
             "stockham_pallas", "sixstep", "fft2_pallas", "chirpz_pallas",
             "bluestein")
 
+#: Mesh-sharded decompositions (fft/distributed.py) — enumerated only when
+#: an active mesh is installed (launch.mesh.set_active_mesh), and kept out
+#: of :data:`BACKENDS` so single-device planning and the conformance
+#: support matrix are byte-identical without one.
+DIST_BACKENDS = ("dist1d", "slab", "pencil")
+
+#: Interconnect cost of one all-to-all'd byte relative to one HBM byte —
+#: ICI/NVLink-class fabrics move bytes at a small single-digit multiple of
+#: HBM cost; this single coefficient is what lets ESTIMATE rank "one
+#: device, one HBM touch" against "P devices, two all-to-alls" honestly.
+DIST_LINK_COST = 4.0
+#: Fixed per-collective charge (latency, layout fix-ups) expressed in
+#: equivalent HBM bytes — keeps tiny transforms from sharding: below ~1 MiB
+#: the collective's constant cost dwarfs any compute win.
+DIST_A2A_LATENCY_BYTES = float(1 << 20)
+#: all_to_alls per decomposition in the default TRANSPOSED-output layout.
+DIST_A2A_COUNT = {"dist1d": 2, "slab": 1, "pencil": 2}
+#: extra all_to_alls for natural-order output.
+DIST_NATURAL_EXTRA = {"dist1d": 1, "slab": 1, "pencil": 2}
+
 
 def axis_feasible(backend: str, n: int) -> bool:
     """Can ``backend`` transform one batched axis of extent ``n``?  This is
@@ -286,7 +316,130 @@ def backend_supports(backend: str, problem: Problem) -> bool:
                for i in range(problem.rank))
 
 
-def candidates(problem: Problem, patient: bool = False) -> list[Candidate]:
+# ---------------------------------------------------------------------------
+# Distributed candidates: slab / pencil / dist1d over the active mesh
+# ---------------------------------------------------------------------------
+def _mesh_devices(mesh) -> int:
+    """Device count of a mesh (or mesh-shaped stand-in with ``.size``)."""
+    return int(mesh.size)
+
+
+def dist_supports(backend: str, problem: Problem,
+                  mesh_shape: Sequence[int]) -> bool:
+    """Can ``backend`` decompose ``problem`` over a mesh of ``mesh_shape``?
+
+    Distribution is complex-kinds-only: the packed r2c half-spectrum extents
+    (n//2, n//2+1) break the tiled all_to_all divisibility that every
+    rotation depends on.  ``dist1d`` additionally needs batch == 1 — its
+    matrix view consumes the whole axis.
+    """
+    if not problem.complex_input:
+        return False
+    from repro.fft import distributed as dist
+
+    shape = tuple(int(s) for s in mesh_shape)
+    p = 1
+    for s in shape:
+        p *= s
+    if p < 2:
+        return False   # one device: decomposition is pure overhead
+    if backend == "dist1d":
+        return (problem.rank == 1 and problem.batch == 1
+                and dist.can_shard_1d(problem.extents[0], p))
+    if backend == "slab":
+        return (len(shape) == 1 and problem.rank in (2, 3)
+                and dist.slab_divisible(problem.extents, p))
+    if backend == "pencil":
+        return (len(shape) == 2 and problem.rank == 3
+                and dist.pencil_divisible(problem.extents, *shape))
+    return False
+
+
+def _pencil_mesh_shapes(p: int, patient: bool = False) -> list[tuple[int, int]]:
+    """(Pr, Pc) factorizations of ``p``: the most balanced one by default,
+    widened to (at most four) alternates under PATIENT."""
+    shapes = [(pr, p // pr) for pr in range(2, int(p ** 0.5) + 1)
+              if p % pr == 0]
+    shapes.sort(key=lambda s: s[1] - s[0])
+    if not patient:
+        return shapes[:1]
+    out = list(shapes)
+    out += [(pc, pr) for pr, pc in shapes if pr != pc]
+    return out[:4]
+
+
+def dist_local_lengths(problem: Problem, cand: Candidate
+                       ) -> list[tuple[int, float]]:
+    """The local sub-transform lengths a distributed candidate runs per
+    shard, each with the swapaxes passes its position costs (+2 when the
+    transform axis is not innermost in the local block, like the separable
+    single-device path; 0 for the innermost axis)."""
+    p = 1
+    for s in cand.mesh:
+        p *= s
+    if cand.backend == "dist1d":
+        from repro.fft.distributed import _choose_1d_factors
+
+        n1, n2 = _choose_1d_factors(problem.extents[0], p)
+        return [(n1, 2.0), (n2, 0.0)]
+    # slab / pencil transform every global axis at its full extent locally
+    return [(n, 0.0 if i == problem.rank - 1 else 2.0)
+            for i, n in enumerate(problem.extents)]
+
+
+def dist_local_engine(n: int) -> str:
+    """The separable backend a distributed plan runs locally at length
+    ``n`` when no explicit ``local`` knob forces one: fewest modeled HBM
+    passes, ties to the earlier (more conservative) BACKENDS entry."""
+    best, best_p = "fourstep", float("inf")
+    for b in BACKENDS:
+        if b in FUSED_ND:
+            continue
+        if axis_feasible(b, n):
+            passes = hbm_passes(b, n)
+            if passes < best_p:
+                best, best_p = b, passes
+    return best
+
+
+def _dist_candidates(problem: Problem, mesh, patient: bool
+                     ) -> list[Candidate]:
+    """Sharded decompositions feasible for ``problem`` over ``mesh``.
+
+    PATIENT widens with the decomposition x local-engine cross: alternate
+    pencil mesh factorizations, and each feasible local engine forced via
+    the ``local`` knob (the distributed analogue of the kernel tile
+    sweeps)."""
+    p = _mesh_devices(mesh)
+    if p < 2:
+        return []
+    out: list[Candidate] = []
+    if dist_supports("dist1d", problem, (p,)):
+        out.append(Candidate("dist1d", mesh=(p,)))
+    if dist_supports("slab", problem, (p,)):
+        out.append(Candidate("slab", mesh=(p,)))
+    for shape in _pencil_mesh_shapes(p, patient):
+        if dist_supports("pencil", problem, shape):
+            out.append(Candidate("pencil", mesh=shape))
+    if patient:
+        extra = []
+        for c in out:
+            lengths = [n for n, _ in dist_local_lengths(problem, c)]
+            default = {dist_local_engine(n) for n in lengths}
+            locals_ = [b for b in BACKENDS
+                       if b not in FUSED_ND and b not in default
+                       and all(axis_feasible(b, n) for n in lengths)
+                       and all(hbm_passes(b, n) != float("inf")
+                               for n in lengths)]
+            locals_.sort(key=lambda b: sum(hbm_passes(b, n) for n in lengths))
+            extra += [Candidate(c.backend, (("local", b),), mesh=c.mesh)
+                      for b in locals_[:2]]
+        out += extra
+    return out
+
+
+def candidates(problem: Problem, patient: bool = False,
+               mesh=None) -> list[Candidate]:
     """Enumerate feasible (backend, knob) combinations for a problem.
 
     The space is ND-native: besides homogeneous candidates (one backend for
@@ -298,6 +451,11 @@ def candidates(problem: Problem, patient: bool = False) -> list[Candidate]:
     six-step n1*n2 split, the fft2 radix, the chirp-Z padded-engine choice
     — the FFTW_PATIENT analogue of searching algorithm *and* implementation
     parameters.
+
+    ``mesh`` gates the distributed decompositions: ``None`` consults the
+    active mesh (``launch.mesh.get_active_mesh``), which is itself None
+    unless a launcher installed one — so single-process planning never
+    offers a multi-device plan.
     """
     exts = problem.extents
     out: list[Candidate] = [Candidate("xla")]
@@ -310,6 +468,12 @@ def candidates(problem: Problem, patient: bool = False) -> list[Candidate]:
             out.append(Candidate(b))
     if problem.rank >= 2:
         out += _mixed_candidates(problem, limit=12 if patient else 6)
+    if mesh is None:
+        from repro.launch.mesh import get_active_mesh
+
+        mesh = get_active_mesh()
+    if mesh is not None:
+        out += _dist_candidates(problem, mesh, patient)
     if patient:
         extra = []
         for c in out:
@@ -503,8 +667,41 @@ def estimate_bytes_moved(problem: Problem, cand: Candidate) -> float:
     non-innermost axis — zero for the innermost one.  Each pass reads and
     writes the live elements once (see :func:`_axis_elems` for the r2c
     half-spectrum sizes).  ``inf`` marks an infeasible assignment.
+
+    Distributed candidates (:data:`DIST_BACKENDS`) model the **per-device**
+    cost — what bounds wall time when every device works in parallel: the
+    local per-axis engine passes on the 1/P-sized shard, plus the
+    interconnect term — each all_to_all moves the device's whole block once,
+    charged at :data:`DIST_LINK_COST` HBM-equivalent bytes per byte plus the
+    fixed :data:`DIST_A2A_LATENCY_BYTES` per collective.  That latency floor
+    is why small transforms never shard and the single-/multi-device
+    crossover sits where it does.
     """
     complex_itemsize = 16 if problem.precision == "double" else 8
+    if cand.backend in DIST_BACKENDS:
+        p = 1
+        for s in cand.mesh:
+            p *= s
+        if not dist_supports(cand.backend, problem, cand.mesh):
+            return float("inf")
+        opts = cand.opts()
+        forced = opts.get("local")
+        passes = 0.0
+        for n_g, swaps in dist_local_lengths(problem, cand):
+            b = forced or dist_local_engine(n_g)
+            hp = hbm_passes(b, n_g)
+            if hp == float("inf") or not axis_feasible(b, n_g):
+                return float("inf")
+            passes += hp + swaps
+        if cand.backend == "dist1d":
+            passes += 1.0   # the per-shard twiddle multiply
+        dev_bytes = (problem.n_elems / p) * complex_itemsize
+        n_a2a = DIST_A2A_COUNT[cand.backend]
+        if opts.get("natural"):
+            n_a2a += DIST_NATURAL_EXTRA[cand.backend]
+        return (passes * 2.0 * dev_bytes
+                + n_a2a * (dev_bytes * DIST_LINK_COST
+                           + DIST_A2A_LATENCY_BYTES))
     if cand.backend in FUSED_ND:
         elems = _axis_elems(problem, problem.rank - 1)
         if cand.backend == "xla":

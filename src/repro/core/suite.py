@@ -119,6 +119,7 @@ class SuiteSpec:
     kinds: tuple[str, ...] = KINDS
     precisions: tuple[str, ...] = ("float",)
     batch: int = 1
+    device_counts: tuple[int, ...] = ()         # multi-device scaling axis
     select: Optional[str] = None                # '-r' wildcard pattern
     rigor: str = "estimate"
     warmups: int = 1
@@ -141,6 +142,10 @@ class SuiteSpec:
             for s in self.sweeps))
         norm(self, "kinds", tuple(self.kinds))
         norm(self, "precisions", tuple(self.precisions))
+        norm(self, "device_counts", tuple(int(n) for n in self.device_counts))
+        if any(n < 1 for n in self.device_counts):
+            raise ValueError(f"device_counts must be >= 1, "
+                             f"got {self.device_counts}")
         if isinstance(self.rigor, PlanRigor):
             norm(self, "rigor", self.rigor.value)
         bad = set(self.kinds) - set(KINDS)
@@ -214,6 +219,12 @@ class SuiteSpec:
         }
         if self.load:
             d["load"] = list(self.load)
+        if self.device_counts:
+            # the scaling axis a driver (tools/bench_compare.py --devices)
+            # fans out over — one subprocess per count, since a process's
+            # XLA device count is fixed at first jax init.  Omitted when
+            # empty so legacy specs round-trip byte-identically.
+            d["device_counts"] = list(self.device_counts)
         for k in ("select", "wisdom", "output", "format"):
             v = getattr(self, k)
             if v is not None:
@@ -544,5 +555,40 @@ def support_matrix(kinds: Sequence[str] = KINDS,
     return rows
 
 
+def dist_support_matrix(device_counts: Sequence[int] = (2, 4, 8),
+                        kinds: Sequence[str] = KINDS,
+                        probes: Optional[dict] = None) -> list[dict]:
+    """The distributed-decomposition x kind x rank x device-count table —
+    the device-count column of the README support matrix.
+
+    Mesh shapes per backend follow the planner's enumeration: ``dist1d`` and
+    ``slab`` flatten the P devices, ``pencil`` uses the most balanced
+    (Pr, Pc) factorization.
+    """
+    from .client import Problem
+    from .plan import DIST_BACKENDS, _pencil_mesh_shapes, dist_supports
+
+    probes = dict(SUPPORT_PROBE_EXTENTS if probes is None else probes)
+    rows = []
+    for backend in DIST_BACKENDS:
+        for devices in device_counts:
+            for rank, extents in sorted(probes.items()):
+                for kind in kinds:
+                    if backend == "pencil":
+                        shapes = _pencil_mesh_shapes(devices) or [(devices,)]
+                        mesh_shape = shapes[0]
+                    else:
+                        mesh_shape = (devices,)
+                    problem = Problem(tuple(extents), kind, "float")
+                    rows.append({
+                        "backend": backend, "kind": kind, "rank": rank,
+                        "devices": devices, "extents": tuple(extents),
+                        "supported": dist_supports(backend, problem,
+                                                   mesh_shape),
+                    })
+    return rows
+
+
 __all__ = ["SweepSpec", "SuiteSpec", "ResultSet", "Session", "run_suite",
-           "SWEEP_CLASSES", "SUPPORT_PROBE_EXTENTS", "support_matrix"]
+           "SWEEP_CLASSES", "SUPPORT_PROBE_EXTENTS", "support_matrix",
+           "dist_support_matrix"]

@@ -12,6 +12,8 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import tempfile
+import warnings
 from typing import Optional
 
 from .client import Problem
@@ -26,24 +28,41 @@ def _candidate_to_record(cand: Candidate) -> dict:
            "options": [list(kv) for kv in cand.options]}
     if cand.axes:   # per-axis ND assignment: recurse (old records omit it)
         rec["axes"] = [_candidate_to_record(a) for a in cand.axes]
+    if cand.mesh:   # distributed: mesh shape is part of the selection
+        rec["mesh"] = list(cand.mesh)
     return rec
 
 
 def _candidate_from_record(rec: dict) -> Candidate:
+    # .get defaults keep every legacy record (no axes/mesh field) loading
     return Candidate(rec["backend"],
                      tuple((k, v) for k, v in rec["options"]),
                      tuple(_candidate_from_record(a)
-                           for a in rec.get("axes", ())))
+                           for a in rec.get("axes", ())),
+                     tuple(int(s) for s in rec.get("mesh", ())))
 
 
 class Wisdom:
     def __init__(self, path: str = DEFAULT_PATH, device_kind: str = ""):
         self.path = path
         self.device_kind = device_kind
-        self._store: dict[str, dict] = {}
-        if os.path.exists(path):
-            with open(path) as f:
-                self._store = json.load(f)
+        self._store: dict[str, dict] = self._read_disk()
+
+    def _read_disk(self) -> dict:
+        """Best-effort load: a missing file is an empty store, and so is a
+        corrupt/truncated one (warn, don't crash) — a concurrent session
+        must never take the whole benchmark down."""
+        try:
+            with open(self.path) as f:
+                store = json.load(f)
+            if not isinstance(store, dict):
+                raise ValueError(f"wisdom root is {type(store).__name__}")
+            return store
+        except FileNotFoundError:
+            return {}
+        except (json.JSONDecodeError, OSError, ValueError) as e:
+            warnings.warn(f"ignoring unreadable wisdom at {self.path}: {e}")
+            return {}
 
     def _key(self, problem: Problem, scope: str = "") -> str:
         """Unscoped keys hold the open planner's (Planned client) choices —
@@ -65,11 +84,32 @@ class Wisdom:
         self._store[self._key(problem, scope)] = _candidate_to_record(cand)
 
     def save(self) -> None:
-        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(self._store, f, indent=1, sort_keys=True)
-        os.replace(tmp, self.path)  # atomic, like checkpoints
+        """Atomic, concurrent-tolerant write.
+
+        Merge-on-save: entries another session persisted since our load are
+        re-read and kept (our selections win conflicts — they're newer).
+        The temp file is uniquely named (mkstemp, not a fixed ``.tmp`` two
+        racing sessions would clobber), fsync'd, then os.replace'd — readers
+        always see a complete JSON document, never a torn write.
+        """
+        d = os.path.dirname(self.path) or "."
+        os.makedirs(d, exist_ok=True)
+        merged = self._read_disk()
+        merged.update(self._store)
+        self._store = merged
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".wisdom-", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(merged, f, indent=1, sort_keys=True)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
     def __len__(self) -> int:
         return len(self._store)

@@ -165,6 +165,31 @@ def test_conformance_full_matrix():
 
 
 # ---------------------------------------------------------------------------
+# distributed cells: decomposition x kind x rank on a forced 4-device mesh
+# ---------------------------------------------------------------------------
+def test_conformance_distributed_cells():
+    """The distributed extension of the matrix — slab/pencil/dist1d cells
+    with planned local engines, natural order, differential + roundtrip.
+    Runs in a subprocess: a process's XLA device count is fixed at first
+    jax init, and the in-process smoke tests must keep seeing 1 device."""
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    proc = subprocess.run(
+        [sys.executable,
+         os.path.join(root, "tests", "helpers", "dist_fft_check.py"),
+         "conformance"],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, \
+        f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "DISTRIBUTED CONFORMANCE CELLS PASSED" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
 # the support matrix itself is part of the contract
 # ---------------------------------------------------------------------------
 def test_support_matrix_declares_expected_ranks():

@@ -18,7 +18,7 @@ from repro.core.schedule import FFT_SCHEDULE, OpSchedule, OpStep, Runner
 from repro.core.tree import BenchNode, build_tree
 from repro.core.wisdom import Wisdom
 from repro.core.clients import jax_fft as jf
-from repro.core.clients.dist_fft import DistFFT1DClient
+from repro.core.clients.dist_fft import DistFFT1DClient, DistFFTNDClient
 
 
 # --------------------------------------------------------------------------
@@ -27,10 +27,11 @@ from repro.core.clients.dist_fft import DistFFT1DClient
 def test_registry_discovers_builtin_clients():
     names = client_names()
     for expected in ("XlaFFT", "Stockham", "FourStep", "Bluestein",
-                     "Planned", "DistFFT1D"):
+                     "Planned", "DistFFT1D", "DistFFTND"):
         assert expected in names
     assert get_client("XlaFFT") is jf.XlaFFTClient
     assert registered_clients()["DistFFT1D"] is DistFFT1DClient
+    assert registered_clients()["DistFFTND"] is DistFFTNDClient
 
 
 def test_registry_rejects_duplicate_name():
@@ -370,3 +371,23 @@ def test_dist_fft_client_through_benchmark(tmp_path):
         warmups=0, repetitions=1, output=str(tmp_path / "d2.csv"))).run_nodes(bad)
     v2 = [r for r in writer2.rows if r.op == "validate"]
     assert v2 and not v2[0].success and "rank-1" in v2[0].error
+
+
+def test_dist_fftnd_client_through_benchmark(tmp_path):
+    """The ND client degrades gracefully to one device (the P=1 slab is the
+    in-process identity-collective path); real meshes are exercised by the
+    subprocess conformance sweep."""
+    nodes = [BenchNode(DistFFTNDClient, Problem((8, 8, 16),
+                                                "Outplace_Complex", "float"))]
+    writer = Benchmark(Context(), BenchmarkConfig(
+        warmups=0, repetitions=2,
+        output=str(tmp_path / "nd.csv"))).run_nodes(nodes)
+    vals = [r for r in writer.rows if r.op == "validate"]
+    assert vals and all(r.success for r in vals), [r.error for r in vals]
+    # constraint violations are recorded failures, not suite aborts
+    bad = [BenchNode(DistFFTNDClient, Problem((64,), "Outplace_Complex",
+                                              "float"))]
+    writer2 = Benchmark(Context(), BenchmarkConfig(
+        warmups=0, repetitions=1, output=str(tmp_path / "nd2.csv"))).run_nodes(bad)
+    v2 = [r for r in writer2.rows if r.op == "validate"]
+    assert v2 and not v2[0].success and "rank-2/3" in v2[0].error

@@ -19,13 +19,28 @@ Throughput is complex-signal GiB/s moved at the *algorithmic minimum* of
 one HBM read + one write — so a fused one-pass kernel scores its real
 bandwidth while a log-N staged backend is penalized for its extra passes,
 which is exactly the trajectory worth recording (paper Fig. 8).
+
+With ``--devices 1 2 4 8`` the tool becomes the scaling driver for the
+mesh-parallel backends: one subprocess per device count (a process's XLA
+device count is fixed at first jax init, so the axis NEEDS processes) with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``, benching the
+distributed decompositions (dist1d / slab / pencil, TRANSPOSED layout)
+against the single-device ``xla`` reference over one extent per paper
+class, merged into one document whose records carry a ``devices`` field:
+
+    PYTHONPATH=src python tools/bench_compare.py --devices 1 2 4 8 \\
+        --out BENCH_PR6.json
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
+import subprocess
+import sys
+import tempfile
 import time
 
 import numpy as np
@@ -40,6 +55,14 @@ SMOKE_EXTENTS = ("256", "1024", "12", "19", "16x16", "8x8x8")
 DEFAULT_BACKENDS = ("xla", "stockham", "fourstep", "fourstep_pallas",
                     "stockham_pallas", "sixstep", "fft2_pallas",
                     "chirpz_pallas", "bluestein")
+
+#: One extent per paper class for the --devices scaling grid (all shardable
+#: over 8 devices): 1D/3D powerof2, 3D radix357, 1D oddshape
+#: (438976 = 2^6 * 19^3 factors as 152 x 2888, both divisible by 8).
+SCALING_EXTENTS = ("4096", "64x64x64", "48x48x48", "438976")
+SMOKE_SCALING_EXTENTS = ("1024", "8x8x8", "12x12x12", "304")
+
+DIST_BACKENDS = ("dist1d", "slab", "pencil")
 
 
 def bench_backend(backend: str, extents: tuple[int, ...], batch: int,
@@ -83,10 +106,130 @@ def bench_backend(backend: str, extents: tuple[int, ...], batch: int,
     return rec
 
 
+def bench_dist_backend(backend: str, extents: tuple[int, ...], batch: int,
+                       reps: int, warmups: int) -> dict:
+    """Time one mesh-parallel decomposition over every visible device, in
+    the production TRANSPOSED-output layout (no reordering pass) with the
+    planner's default local engines."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.client import Problem
+    from repro.core.extents import classify
+    from repro.core.plan import Candidate, _pencil_mesh_shapes
+    from repro.core.clients.dist_fft import dist_engines
+    from repro.fft import distributed as dist
+    from repro.launch.mesh import flat_mesh, reshaped_mesh
+
+    p_dev = jax.device_count()
+    b = 1 if backend == "dist1d" else batch    # dist1d consumes the whole axis
+    problem = Problem(extents, "Outplace_Complex", "float", batch=b)
+    rec = {"backend": backend, "extent": "x".join(map(str, extents)),
+           "rank": len(extents), "batch": b, "class": classify(extents),
+           "devices": p_dev}
+    if backend == "pencil":
+        shapes = _pencil_mesh_shapes(p_dev)
+        if not shapes and p_dev == 1:
+            shapes = [(1, 1)]   # degenerate 1-device baseline point
+        mesh_shape = shapes[0] if shapes else None
+    else:
+        mesh_shape = (p_dev,)
+    rank = len(extents)
+    feasible = mesh_shape is not None and (
+        (backend == "dist1d" and rank == 1
+         and dist.can_shard_1d(extents[0], p_dev))
+        or (backend == "slab" and rank in (2, 3)
+            and dist.slab_divisible(extents, p_dev))
+        or (backend == "pencil" and rank == 3
+            and dist.pencil_divisible(extents, *mesh_shape)))
+    if not feasible:
+        rec.update(ok=False, error="unsupported extents/rank/device count")
+        return rec
+    rec["mesh"] = "x".join(map(str, mesh_shape))
+    try:
+        base = flat_mesh()
+        cand = Candidate(backend, mesh=mesh_shape)
+        engines = dist_engines(problem, cand)
+        if backend == "dist1d":
+            mesh = reshaped_mesh(base, mesh_shape, names=("data",))
+            fn, _ = dist.make_fft1d(mesh, "data", extents[0],
+                                    engines=engines)
+            sharding = NamedSharding(mesh, P("data"))
+            shape = (extents[0],)
+        else:
+            mesh = reshaped_mesh(base, mesh_shape)
+            if backend == "slab":
+                fn, in_spec, _ = dist.make_slab_fftnd(
+                    mesh, "d0", extents, engines=engines)
+            else:
+                fn, in_spec, _ = dist.make_pencil_fftnd(
+                    mesh, "d0", "d1", extents, engines=engines)
+            sharding = NamedSharding(mesh, in_spec)
+            shape = (b, *extents)
+        rng = np.random.default_rng(0)
+        x = (rng.standard_normal(shape) +
+             1j * rng.standard_normal(shape)).astype(np.complex64)
+        xd = jax.device_put(x, sharding)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(xd))
+        rec["compile_ms"] = (time.perf_counter() - t0) * 1e3
+        for _ in range(warmups):
+            jax.block_until_ready(fn(xd))
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(xd))
+            best = min(best, time.perf_counter() - t0)
+        rec["time_ms"] = best * 1e3
+        moved = 2 * x.nbytes          # one read + one write of the signal
+        rec["gib_per_s"] = moved / best / 2**30
+        rec["ok"] = True
+    except Exception as e:
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}")
+    return rec
+
+
+def _fan_out_devices(args, device_counts: list[int]) -> int:
+    """Run the scaling grid: one subprocess per device count (the XLA host
+    device count is frozen at first jax init), merge into one document."""
+    merged = {"meta": None, "results": []}
+    for n in device_counts:
+        fd, out = tempfile.mkstemp(suffix=f".dev{n}.json")
+        os.close(fd)
+        cmd = [sys.executable, os.path.abspath(__file__),
+               "--_worker", "--out", out,
+               "--batch", str(args.batch), "--reps", str(args.reps),
+               "--warmups", str(args.warmups)]
+        if args.smoke:
+            cmd.append("--smoke")
+        if args.extents:
+            cmd += ["--extents"] + [str(e) for e in args.extents]
+        env = dict(os.environ)
+        flags = [f for f in env.get("XLA_FLAGS", "").split()
+                 if not f.startswith("--xla_force_host_platform_device_count")]
+        flags.append(f"--xla_force_host_platform_device_count={n}")
+        env["XLA_FLAGS"] = " ".join(flags)
+        print(f"--- devices={n} ---")
+        subprocess.run(cmd, check=True, env=env)
+        with open(out) as f:
+            doc = json.load(f)
+        os.unlink(out)
+        if merged["meta"] is None:
+            merged["meta"] = doc["meta"]
+            merged["meta"]["device_counts"] = []
+        merged["meta"]["device_counts"].append(n)
+        merged["results"].extend(doc["results"])
+    with open(args.out, "w") as f:
+        json.dump(merged, f, indent=1)
+        f.write("\n")
+    print(f"wrote {len(merged['results'])} records "
+          f"({len(device_counts)}-point device axis) to {args.out}")
+    return 0
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--out", default="BENCH_PR5.json")
-    p.add_argument("--backends", nargs="+", default=list(DEFAULT_BACKENDS))
+    p.add_argument("--backends", nargs="+", default=None)
     p.add_argument("--extents", nargs="+", default=None,
                    help="extent specs like 4096 64x64 16x16x16")
     p.add_argument("--batch", type=int, default=4)
@@ -94,23 +237,43 @@ def main(argv=None) -> int:
     p.add_argument("--warmups", type=int, default=1)
     p.add_argument("--smoke", action="store_true",
                    help="tiny grid + 1 rep (CI interpret-mode smoke)")
+    p.add_argument("--devices", nargs="+", type=int, default=None,
+                   help="device-count scaling axis, e.g. --devices 1 2 4 8 "
+                        "(one subprocess per count; benches xla + the "
+                        "distributed decompositions)")
+    p.add_argument("--_worker", action="store_true", help=argparse.SUPPRESS)
     args = p.parse_args(argv)
+
+    if args.devices:
+        return _fan_out_devices(args, args.devices)
+
+    scaling = args._worker   # per-device-count subprocess: the scaling grid
     if args.smoke:
-        extents = list(args.extents or SMOKE_EXTENTS)
+        extents = list(args.extents
+                       or (SMOKE_SCALING_EXTENTS if scaling else SMOKE_EXTENTS))
         reps, warmups = 1, 0
     else:
-        extents = list(args.extents or DEFAULT_EXTENTS)
+        extents = list(args.extents
+                       or (SCALING_EXTENTS if scaling else DEFAULT_EXTENTS))
         reps, warmups = args.reps, args.warmups
+    if args.backends:
+        backends = list(args.backends)
+    elif scaling:
+        backends = ["xla", *DIST_BACKENDS]   # dist vs the vendor reference
+    else:
+        backends = list(DEFAULT_BACKENDS)
 
     from repro.core.extents import parse_extents
     grid = [parse_extents(str(e)) for e in extents]
 
     import jax
     dev = jax.devices()[0]
+    n_dev = jax.device_count()
     doc = {
         "meta": {
             "device_kind": dev.device_kind,
             "platform": dev.platform,
+            "devices": n_dev,
             "interpret_kernels": dev.platform != "tpu",
             "python": platform.python_version(),
             "jax": jax.__version__,
@@ -122,8 +285,13 @@ def main(argv=None) -> int:
         "results": [],
     }
     for ext in grid:
-        for backend in args.backends:
-            rec = bench_backend(backend, ext, args.batch, reps, warmups)
+        for backend in backends:
+            if backend in DIST_BACKENDS:
+                rec = bench_dist_backend(backend, ext, args.batch, reps,
+                                         warmups)
+            else:
+                rec = bench_backend(backend, ext, args.batch, reps, warmups)
+                rec["devices"] = 1 if not scaling else n_dev
             doc["results"].append(rec)
             status = (f"{rec['time_ms']:9.3f} ms  {rec['gib_per_s']:7.2f} GiB/s"
                       if rec["ok"] else f"infeasible: {rec['error']}")
