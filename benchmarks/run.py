@@ -4,8 +4,9 @@ Prints ``name,us_per_call,derived`` CSV; a few minutes total on one CPU core.
   PYTHONPATH=src python -m benchmarks.run [table ...]
 
 Tables map to the paper: overhead=Fig2, tts=Fig3, plan_rigor=Figs4-5,
-backends=Fig6, radix=Fig7, dtypes=Fig8; kernels + lm_steps are the
-beyond-paper extensions (Pallas kernels, LM steps through the same runner).
+backends=Fig6, radix=Fig7, dtypes=Fig8; kernels, lm_steps and serve are the
+beyond-paper extensions (Pallas kernels, LM steps through the same runner,
+the FFT serving layer under mixed-shape traffic).
 Every table is a declarative :class:`repro.core.suite.SuiteSpec` executed by
 the shared ``run_suite`` helper.
 """
@@ -16,7 +17,7 @@ import sys
 import time
 
 TABLES = ["overhead", "tts", "plan_rigor", "backends", "radix", "dtypes",
-          "kernels", "lm_steps"]
+          "kernels", "lm_steps", "serve"]
 
 
 def main(argv: list[str] | None = None) -> int:

@@ -37,7 +37,7 @@ from .client import KINDS, PRECISIONS
 from .plan import PlanRigor
 from .registry import client_names
 from .suite import Session, SuiteSpec
-from .clients import jax_fft, dist_fft  # noqa: F401  (populate the registry)
+from .clients import jax_fft, dist_fft, serve_fft  # noqa: F401  (populate the registry)
 
 
 def build_parser() -> argparse.ArgumentParser:

@@ -170,6 +170,12 @@ def _inverse_fn(problem: Problem, cand: Candidate) -> Callable:
     return lambda y: nd.irfftn(y, problem.extents, engines, axes=axes)
 
 
+#: Public name for the un-jitted forward builder — the serving engine wraps
+#: it with its own jit (donated staging buffer, AOT-compiled per batch
+#: bucket) instead of taking build_forward's plain jit.
+forward_fn = _forward_fn
+
+
 def build_forward(problem: Problem, cand: Candidate) -> Callable:
     """jit-compiled forward for planner MEASURE timing."""
     return jax.jit(_forward_fn(problem, cand))

@@ -17,6 +17,7 @@ by far) — the planner therefore reports plan_time_ms with every plan.
 from __future__ import annotations
 
 import enum
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
@@ -119,12 +120,56 @@ class PlanCache:
     measured cold compile, and warm repetitions reuse the executable.  Both
     quantities stay measured, and result rows carry a ``plan_cache``
     hit/miss marker so they remain distinguishable downstream.
+
+    Lookups are **concurrency-safe**: the maps are guarded by a lock and
+    builds are single-flight — when several serving workers race on the same
+    cold key, exactly one runs ``build`` while the rest wait on its in-flight
+    marker and then take the hit path, so ``misses`` always equals the number
+    of distinct keys built and ``hits + misses`` the number of lookups (the
+    invariant the threaded hammer test pins).
     """
 
     def __init__(self) -> None:
         self._execs: dict[str, Any] = {}
         self._plans: dict[str, Any] = {}
+        self._lock = threading.Lock()
+        self._inflight: dict[str, threading.Event] = {}
         self.stats = PlanCacheStats()
+
+    def _single_flight(self, table: dict, kind: str, key: str,
+                       build: Callable[[], Any],
+                       count_stats: bool) -> tuple[Any, str, float]:
+        """One builder per (kind, key); racing threads wait and read the
+        published value.  The lock is dropped while ``build`` runs (compiles
+        can take seconds) and re-taken to publish.  ``count_stats`` keeps the
+        hit/miss accounting an executable-cache quantity, as before."""
+        flight_key = f"{kind}|{key}"
+        while True:
+            with self._lock:
+                if key in table:
+                    if count_stats:
+                        self.stats.hits += 1
+                    return table[key], "hit", 0.0
+                ev = self._inflight.get(flight_key)
+                if ev is None:
+                    ev = threading.Event()
+                    self._inflight[flight_key] = ev
+                    break           # we are the builder
+            ev.wait()               # another thread is building this key
+        t0 = time.perf_counter()
+        try:
+            built = build()
+            ms = (time.perf_counter() - t0) * 1e3
+            with self._lock:
+                table[key] = built
+                if count_stats:
+                    self.stats.misses += 1
+                    self.stats.cold_ms += ms
+            return built, "miss", ms
+        finally:
+            with self._lock:
+                self._inflight.pop(flight_key, None)
+            ev.set()
 
     # --- keys -------------------------------------------------------------
     @staticmethod
@@ -146,30 +191,21 @@ class PlanCache:
         ``build`` runs only on a miss; its wall time is the measured cold
         compile cost.
         """
-        if key in self._execs:
-            self.stats.hits += 1
-            return self._execs[key], "hit", 0.0
-        t0 = time.perf_counter()
-        compiled = build()
-        ms = (time.perf_counter() - t0) * 1e3
-        self._execs[key] = compiled
-        self.stats.misses += 1
-        self.stats.cold_ms += ms
-        return compiled, "miss", ms
+        return self._single_flight(self._execs, "exec", key, build,
+                                   count_stats=True)
 
     def plan(self, key: str, make: Callable[[], Any]) -> tuple[Any, str]:
         """Memoized plan selection (candidate sweeps run at most once per
         key — a MEASURE sweep over repeated repetitions stops re-compiling
         every candidate).  ``None`` results (wisdom misses) are cached too:
         a deterministic miss stays a miss."""
-        if key in self._plans:
-            return self._plans[key], "hit"
-        plan = make()
-        self._plans[key] = plan
-        return plan, "miss"
+        plan, event, _ = self._single_flight(self._plans, "plan", key, make,
+                                             count_stats=False)
+        return plan, event
 
     def __len__(self) -> int:
-        return len(self._execs)
+        with self._lock:
+            return len(self._execs)
 
 
 def cached_build(plan_cache: "PlanCache | None", events: dict, op_name: str,

@@ -171,9 +171,41 @@ def save_csv(path: str, rows, columns) -> str:
     return path
 
 
-def aggregate_rows(rows, op: str | None = None):
+#: The tail-latency quantiles every reporter shares (serve metrics, the
+#: aggregate tables, and ``ResultSet.summary()``).
+PERCENTILES = (50, 95, 99)
+
+
+def percentile(vals, q: float) -> float:
+    """q-th percentile (0..100) with linear interpolation between closest
+    ranks — matches ``numpy.percentile``'s default method without needing
+    an array copy of the input."""
+    if not vals:
+        raise ValueError("percentile of empty sequence")
+    s = sorted(vals)
+    if len(s) == 1:
+        return float(s[0])
+    pos = (len(s) - 1) * (q / 100.0)
+    lo = int(pos)
+    hi = min(lo + 1, len(s) - 1)
+    frac = pos - lo
+    return float(s[lo] + (s[hi] - s[lo]) * frac)
+
+
+def percentile_summary(vals, quantiles=PERCENTILES) -> dict:
+    """``{"p50": ..., "p95": ..., "p99": ...}`` over ``vals`` (ms)."""
+    return {f"p{q:g}": percentile(vals, q) for q in quantiles}
+
+
+def aggregate_rows(rows, op: str | None = None, percentiles: bool = False):
     """mean/stdev per (library, extents, precision, kind, rigor, op) over the
     successful rows — the aggregation the paper-style figures consume.
+
+    With ``percentiles=True`` each tuple gains p50/p95/p99 columns between
+    stdev and the count — ``(*key, mean, sd, p50, p95, p99, n)`` — the
+    tail-latency view the serving reporter consumes.  The default layout
+    (``(*key, mean, sd, n)``) is unchanged so existing consumers keep
+    unpacking 9-tuples.
 
     Shared by :class:`ResultWriter` and :class:`repro.core.suite.ResultSet`.
     """
@@ -187,7 +219,11 @@ def aggregate_rows(rows, op: str | None = None):
     for key, vals in sorted(groups.items()):
         mean = statistics.fmean(vals)
         sd = statistics.stdev(vals) if len(vals) > 1 else 0.0
-        out.append((*key, mean, sd, len(vals)))
+        if percentiles:
+            ps = tuple(percentile(vals, q) for q in PERCENTILES)
+            out.append((*key, mean, sd, *ps, len(vals)))
+        else:
+            out.append((*key, mean, sd, len(vals)))
     return out
 
 

@@ -27,6 +27,7 @@ from __future__ import annotations
 import importlib
 import json
 import os
+import statistics
 from dataclasses import dataclass, fields
 from typing import Any, Iterable, Iterator, Optional, Sequence
 
@@ -36,7 +37,7 @@ from .extents import SWEEP_CLASSES, format_extents, parse_extents, sweep_extents
 from .plan import PlanCache, PlanCacheStats, PlanRigor
 from .registry import get_client
 from .results import (ResultSink, Row, aggregate_rows, columns_for,
-                      open_sink, rows_to_csv, save_csv)
+                      open_sink, percentile_summary, rows_to_csv, save_csv)
 from .tree import BenchNode, build_tree, select
 from .wisdom import Wisdom
 
@@ -182,7 +183,7 @@ class SuiteSpec:
         """Materialize the benchmark tree this spec describes."""
         # built-in clients self-register on import (deferred: spec
         # serialization must work without pulling in jax)
-        from .clients import jax_fft, dist_fft  # noqa: F401
+        from .clients import jax_fft, dist_fft, serve_fft  # noqa: F401
         self.load_modules()
         exts = self.resolved_extents()
         if not exts:
@@ -351,15 +352,22 @@ class ResultSet:
     def failures(self) -> list[Row]:
         return [r for r in self.rows if not r.success]
 
-    def aggregate(self, op: Optional[str] = None):
-        """mean/stdev per (library, extents, precision, kind, rigor, op)."""
-        return aggregate_rows(self.rows, op)
+    def aggregate(self, op: Optional[str] = None, percentiles: bool = False):
+        """mean/stdev per (library, extents, precision, kind, rigor, op);
+        ``percentiles=True`` adds p50/p95/p99 columns (see
+        :func:`repro.core.results.aggregate_rows`)."""
+        return aggregate_rows(self.rows, op, percentiles=percentiles)
 
-    def summary(self) -> dict:
+    def summary(self, latency_op: str = "execute_forward") -> dict:
         """Planner-cost overview (paper Figs. 4-5) without grepping CSV rows:
         row/failure counts, aggregate planning time (the init ops carry
         planning + compilation), its cold-compile share, and the plan-cache
-        hit/miss totals — per-row markers plus the session-level stats."""
+        hit/miss totals — per-row markers plus the session-level stats.
+
+        When any successful ``latency_op`` rows exist (``execute_forward``
+        by default; pass ``"serve_request"`` for service replays) the
+        summary also carries their tail-latency view — mean + p50/p95/p99
+        over every matching row."""
         init_ops = ("init_forward", "init_inverse")
         plan_rows = [r for r in self.rows if r.op in init_ops]
         events = [r.plan_cache for r in plan_rows if r.plan_cache]
@@ -378,6 +386,12 @@ class ResultSet:
             "plan_cache_hits": sum(1 for e in events if e == "hit"),
             "plan_cache_misses": sum(1 for e in events if e == "miss"),
         }
+        lat = [r.time_ms for r in self.rows
+               if r.success and r.op == latency_op]
+        if lat:
+            out["latency_ms"] = {"op": latency_op, "n": len(lat),
+                                 "mean": statistics.fmean(lat),
+                                 **percentile_summary(lat)}
         if self.plan_stats is not None:
             out["plan_cache"] = self.plan_stats.as_dict()
         return out

@@ -13,6 +13,7 @@ import argparse
 import json
 import os
 import tempfile
+import threading
 import warnings
 from typing import Optional
 
@@ -43,9 +44,14 @@ def _candidate_from_record(rec: dict) -> Candidate:
 
 
 class Wisdom:
+    """In-memory map is guarded by a lock so serving workers can look up,
+    record, and save concurrently; the *file* side was already safe (atomic
+    mkstemp + os.replace writes with merge-on-save, below)."""
+
     def __init__(self, path: str = DEFAULT_PATH, device_kind: str = ""):
         self.path = path
         self.device_kind = device_kind
+        self._lock = threading.RLock()
         self._store: dict[str, dict] = self._read_disk()
 
     def _read_disk(self) -> dict:
@@ -75,13 +81,15 @@ class Wisdom:
         return f"{base}|{scope}" if scope else base
 
     def lookup(self, problem: Problem, scope: str = "") -> Optional[Candidate]:
-        rec = self._store.get(self._key(problem, scope))
+        with self._lock:
+            rec = self._store.get(self._key(problem, scope))
         if rec is None:
             return None
         return _candidate_from_record(rec)
 
     def record(self, problem: Problem, cand: Candidate, scope: str = "") -> None:
-        self._store[self._key(problem, scope)] = _candidate_to_record(cand)
+        with self._lock:
+            self._store[self._key(problem, scope)] = _candidate_to_record(cand)
 
     def save(self) -> None:
         """Atomic, concurrent-tolerant write.
@@ -94,13 +102,15 @@ class Wisdom:
         """
         d = os.path.dirname(self.path) or "."
         os.makedirs(d, exist_ok=True)
-        merged = self._read_disk()
-        merged.update(self._store)
-        self._store = merged
+        with self._lock:
+            merged = self._read_disk()
+            merged.update(self._store)
+            self._store = merged
+            snapshot = dict(merged)
         fd, tmp = tempfile.mkstemp(dir=d, prefix=".wisdom-", suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
-                json.dump(merged, f, indent=1, sort_keys=True)
+                json.dump(snapshot, f, indent=1, sort_keys=True)
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp, self.path)
@@ -112,7 +122,8 @@ class Wisdom:
             raise
 
     def __len__(self) -> int:
-        return len(self._store)
+        with self._lock:
+            return len(self._store)
 
 
 def generate(sizes, path: str = DEFAULT_PATH, rigor: PlanRigor = PlanRigor.PATIENT,

@@ -56,11 +56,6 @@ class ServeEngine:
         resulting KV into the batch cache at ``slot``."""
         small = self.model.init_cache(1, self.max_len)
         last, small = self.model.prefill(params, tokens, small)
-        def put(big, one):
-            if big.ndim == one.ndim:  # stacked caches share layout
-                idx = (slice(None),) * 0
-            # batch axis differs per cache kind; match by broadcasting rule:
-            return big
         # generic scatter: every cache leaf has exactly one axis == slots
         def scatter(big, one):
             ax = _batch_axis(big.shape, self.slots, one.shape)
@@ -119,7 +114,10 @@ def _batch_axis(big_shape, slots, one_shape) -> int:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
-    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="shrink the config for smoke runs "
+                         "(--no-reduced for the full architecture)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)

@@ -1,0 +1,30 @@
+"""FFT serving layer: request coalescing, traffic replay, tail latency.
+
+The offline suite answers "how fast is one FFT on a quiet device"; this
+package answers the serving question — what latency distribution does a
+*mix* of FFT shapes see under load, and how much does coalescing
+same-plan requests into one batched launch buy.
+
+Entry points:
+
+* :class:`FFTService` / :class:`ServeConfig` — the engine: bounded queue,
+  coalescer, double-buffered worker loop over a shared Session.
+* :class:`TrafficSpec` / :func:`replay` — seeded Zipf mixed-shape traffic
+  at a configurable arrival rate.
+* ``benchmarks/table_serve.py`` and ``tools/bench_compare.py --serve`` —
+  the reporting surfaces.
+"""
+
+from .request import (FFTRequest, QueueFull, RequestTimeout, ServeError,
+                      make_request)
+from .queue import RequestQueue
+from .coalescer import Batch, Coalescer
+from .metrics import ServiceMetrics
+from .engine import FFTService, ServeConfig
+from .replay import ReplayReport, TrafficSpec, replay
+
+__all__ = [
+    "Batch", "Coalescer", "FFTRequest", "FFTService", "QueueFull",
+    "ReplayReport", "RequestQueue", "RequestTimeout", "ServeConfig",
+    "ServeError", "ServiceMetrics", "TrafficSpec", "make_request", "replay",
+]

@@ -1,0 +1,445 @@
+"""The FFT service engine: a long-lived worker loop over a Session.
+
+Architecture (README "FFT service" section has the sketch):
+
+    submit() ──▶ RequestQueue (bounded: backpressure) ──▶ Coalescer
+                                                            │ batches
+                                                            ▼
+                  ┌──────────────── worker loop ────────────────────┐
+                  │ stage rows into a host buffer (pow2 bucket)     │
+                  │ upload + dispatch donated executable (async)    │
+                  │ retire oldest in-flight batch, slice results    │
+                  └─────────────────────────────────────────────────┘
+
+Perf machinery:
+
+* **Coalescing** — same-plan requests stack on the batch axis of one
+  compiled executable (see :mod:`repro.serve.coalescer`).
+* **Batch buckets** — coalesced row counts are rounded up to powers of two,
+  so at most log2(max_batch) executables exist per plan instead of one per
+  observed batch size; slack rows are staged but sliced away (counted in
+  the metrics as ``padded_rows``).
+* **Donated buffers** — executables are jitted with ``donate_argnums=(0,)``:
+  XLA reuses the uploaded staging buffer for scratch/output instead of
+  allocating fresh device memory per launch.
+* **Double buffering** — dispatch is asynchronous; up to ``inflight``
+  batches are on device while the worker stages the next host buffer, so
+  host staging overlaps device compute.  Two alternating host staging
+  arrays per (plan, bucket) avoid re-allocation.
+
+Robustness: a bounded queue (backpressure), per-request deadlines (expired
+requests complete with a clean timeout error *before* wasting a launch),
+and engine exceptions that fail only the affected batch — the worker loop
+itself never wedges.
+
+Concurrency: the PlanCache is shared with the owning Session — its lookups
+are single-flight and lock-guarded (PR 7), so several workers (or a worker
+plus a foreground ``Session.run``) race safely on cold plans.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, fields
+from typing import Any, Optional
+
+import numpy as np
+
+from ..core.client import Problem
+from ..core.extents import classify, format_extents, next_pow2
+from ..core.plan import Candidate, PlanCache, PlanRigor, make_plan
+from ..core.results import Row
+from .coalescer import Batch, Coalescer
+from .metrics import ServiceMetrics
+from .queue import RequestQueue
+from .request import (FFTRequest, RequestTimeout, ServeError, make_request)
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Service tuning knobs (all plain data: round-trips via to/from_dict
+    like every other spec in the suite)."""
+
+    max_queue: int = 1024            # bounded intake: the backpressure knob
+    coalesce_window_ms: float = 2.0  # linger for stragglers; 0 = serial FIFO
+    max_batch: int = 32              # row budget per coalesced launch
+    workers: int = 1                 # consumer threads
+    inflight: int = 2                # double-buffer depth per worker
+    rigor: str = "estimate"          # planner rigor for request-time plans
+    backend: Optional[str] = None    # pin one backend (bench per-library)
+    timeout_ms: Optional[float] = None   # default per-request deadline
+    bucket_batches: bool = True      # pow2-pad coalesced rows
+    record_requests: bool = True     # keep per-request rows for ResultSet
+
+    def __post_init__(self):
+        if self.max_queue < 1 or self.max_batch < 1 or self.workers < 1 \
+                or self.inflight < 1:
+            raise ValueError(f"bad ServeConfig bounds: {self}")
+        if self.rigor not in {r.value for r in PlanRigor}:
+            raise ValueError(f"unknown rigor {self.rigor!r}")
+
+    def to_dict(self) -> dict:
+        d = {}
+        for f in fields(self):
+            v = getattr(self, f.name)
+            if v is not None:
+                d[f.name] = v
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServeConfig":
+        known = {f.name for f in fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown ServeConfig key(s) {sorted(unknown)}; "
+                             f"known: {', '.join(sorted(known))}")
+        return cls(**d)
+
+
+class _Inflight:
+    """One dispatched batch awaiting retirement."""
+
+    __slots__ = ("batch", "out", "row_spans", "t_dispatch")
+
+    def __init__(self, batch: Batch, out: Any,
+                 row_spans: list[tuple[int, int]], t_dispatch: float):
+        self.batch = batch
+        self.out = out
+        self.row_spans = row_spans
+        self.t_dispatch = t_dispatch
+
+
+class FFTService:
+    """Long-lived FFT serving loop on top of a Session.
+
+    Use as a context manager (``with FFTService(session) as svc``) or call
+    :meth:`start` / :meth:`stop` explicitly.  ``submit`` returns the request
+    itself, which doubles as the completion future.
+    """
+
+    def __init__(self, session=None, config: ServeConfig = ServeConfig(),
+                 wisdom=None):
+        from ..core.suite import Session
+
+        self.session = session if session is not None else Session()
+        self.config = config
+        self.wisdom = wisdom if wisdom is not None \
+            else getattr(self.session, "_wisdom", None)
+        self.queue = RequestQueue(config.max_queue)
+        self.metrics = ServiceMetrics()
+        self._coalescer = Coalescer(self.queue,
+                                    window_ms=config.coalesce_window_ms,
+                                    max_rows=config.max_batch)
+        self._threads: list[threading.Thread] = []
+        self._staging: dict[tuple, list[np.ndarray]] = {}
+        self._staging_flip: dict[tuple, int] = {}
+        self._staging_lock = threading.Lock()
+        self._rows: list[Row] = []
+        self._rows_lock = threading.Lock()
+        self._started = False
+        self._worker_errors: list[BaseException] = []
+
+    # --- lifecycle ---------------------------------------------------------
+    def start(self) -> "FFTService":
+        if self._started:
+            return self
+        self._started = True
+        for i in range(self.config.workers):
+            t = threading.Thread(target=self._worker_loop,
+                                 name=f"fft-serve-{i}", daemon=True)
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def stop(self, drain: bool = True) -> dict:
+        """Shut down: close the intake, let workers drain what is queued
+        (``drain=False`` fails queued requests instead), join, and return
+        the final metrics snapshot."""
+        if not drain:
+            failed = []
+            while True:
+                req = self.queue.get(timeout=0)
+                if req is None:
+                    break
+                failed.append(req)
+            for req in failed:
+                self._fail(req, ServeError("service stopped"))
+        self.queue.close()
+        for t in self._threads:
+            t.join(timeout=60)
+        self._threads.clear()
+        self._started = False
+        return self.report()
+
+    def __enter__(self) -> "FFTService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # --- intake ------------------------------------------------------------
+    def submit(self, payload: np.ndarray, kind: str = "Outplace_Complex",
+               precision: Optional[str] = None, rank: Optional[int] = None,
+               timeout_ms: Optional[float] = None, block: bool = True,
+               block_timeout: Optional[float] = None) -> FFTRequest:
+        """Enqueue one forward-FFT job; returns its future.
+
+        ``block=False`` sheds load instead of waiting on a full queue
+        (raises :class:`QueueFull`).  ``timeout_ms`` overrides the service
+        default deadline for this request.
+        """
+        if not self._started:
+            raise ServeError("service not started (use 'with FFTService(...)'"
+                             " or call start())")
+        if timeout_ms is None:
+            timeout_ms = self.config.timeout_ms
+        req = make_request(payload, kind=kind, precision=precision,
+                           rank=rank, timeout_ms=timeout_ms)
+        if req.rows > self.config.max_batch:
+            raise ServeError(
+                f"request rows {req.rows} exceed max_batch "
+                f"{self.config.max_batch}")
+        self.metrics.on_submit()
+        self.queue.put(req, block=block, timeout=block_timeout)
+        return req
+
+    def submit_many(self, payloads, kind: str = "Outplace_Complex",
+                    precision: Optional[str] = None,
+                    rank: Optional[int] = None,
+                    timeout_ms: Optional[float] = None, block: bool = True,
+                    block_timeout: Optional[float] = None
+                    ) -> list[FFTRequest]:
+        """Enqueue a burst of jobs in one shot (single queue lock + one
+        worker wakeup, vs a lock/notify/GIL-handoff per ``submit``) —
+        all-or-nothing on a full queue.  All payloads share the kind /
+        precision / deadline; returns the request futures in order."""
+        if not self._started:
+            raise ServeError("service not started (use 'with FFTService(...)'"
+                             " or call start())")
+        if timeout_ms is None:
+            timeout_ms = self.config.timeout_ms
+        reqs = [make_request(p, kind=kind, precision=precision, rank=rank,
+                             timeout_ms=timeout_ms) for p in payloads]
+        for req in reqs:
+            if req.rows > self.config.max_batch:
+                raise ServeError(
+                    f"request rows {req.rows} exceed max_batch "
+                    f"{self.config.max_batch}")
+        self.metrics.on_submit(len(reqs))
+        self.queue.put_many(reqs, block=block, timeout=block_timeout)
+        return reqs
+
+    def prewarm(self, extents, kind: str = "Outplace_Complex",
+                precision: str = "float") -> int:
+        """Compile the executables this plan's traffic can hit — every pow2
+        batch bucket up to ``max_batch`` — before opening the doors, so
+        steady-state percentiles measure serving, not XLA compiles.
+        Returns the number of bucket executables now warm."""
+        batch = Batch(key=(tuple(int(v) for v in extents), kind, precision))
+        n, bucket = 0, 1
+        while bucket <= self.config.max_batch:
+            self._executable(batch, bucket)
+            n += 1
+            if not self.config.bucket_batches:
+                break   # unbucketed rows are unbounded; warm bucket 1 only
+            bucket *= 2
+        return n
+
+    # --- worker loop -------------------------------------------------------
+    def _worker_loop(self) -> None:
+        pending: deque[_Inflight] = deque()
+        try:
+            while True:
+                # With work in flight, poll without blocking so an idle
+                # queue retires batches instead of stalling them behind
+                # the inflight threshold.
+                batch = self._coalescer.next_batch(
+                    poll_ms=0.0 if pending else 50.0)
+                if batch is None:
+                    if pending:
+                        self._retire(pending.popleft())
+                        continue
+                    if self.queue.closed:
+                        break
+                    continue
+                inflight = self._dispatch(batch)
+                if inflight is not None:
+                    pending.append(inflight)
+                while len(pending) >= self.config.inflight:
+                    self._retire(pending.popleft())
+        except BaseException as e:      # defensive: never die silently
+            self._worker_errors.append(e)
+        finally:
+            while pending:
+                self._retire(pending.popleft())
+
+    def _dispatch(self, batch: Batch) -> Optional[_Inflight]:
+        now = time.perf_counter()
+        live: list[FFTRequest] = []
+        for req in batch.requests:
+            req.t_dispatch = now
+            req.coalesced = batch.n_requests
+            if req.expired(now):
+                self._fail(req, RequestTimeout(
+                    f"request {req.rid} expired in queue "
+                    f"(waited {req.queue_ms:.1f} ms)"), timeout=True)
+            else:
+                live.append(req)
+        if not live:
+            return None
+        batch.requests = live
+        rows = batch.rows
+        bucket = next_pow2(rows) if self.config.bucket_batches else rows
+        try:
+            compiled = self._executable(batch, bucket)
+            staged = self._stage(batch, bucket)
+            import jax
+            device_in = jax.device_put(staged)
+            out = compiled(device_in)   # async dispatch: do not block here
+        except Exception as e:
+            for req in live:
+                self._fail(req, ServeError(
+                    f"engine error: {type(e).__name__}: {e}"))
+            return None
+        self.metrics.on_batch(batch.n_requests, rows, bucket - rows)
+        spans = []
+        r0 = 0
+        for req in live:
+            spans.append((r0, r0 + req.rows))
+            r0 += req.rows
+        return _Inflight(batch, out, spans, now)
+
+    def _retire(self, inflight: _Inflight) -> None:
+        batch = inflight.batch
+        try:
+            import jax
+            jax.block_until_ready(inflight.out)
+            host_out = np.asarray(inflight.out)
+        except Exception as e:
+            for req in batch.requests:
+                self._fail(req, ServeError(
+                    f"engine error: {type(e).__name__}: {e}"))
+            return
+        now = time.perf_counter()
+        for req, (r0, r1) in zip(batch.requests, inflight.row_spans):
+            if req.expired(now):
+                self._fail(req, RequestTimeout(
+                    f"request {req.rid} missed its deadline "
+                    f"(completed {req.latency_ms:.1f} ms after enqueue)"),
+                    timeout=True)
+                continue
+            req._complete(result=host_out[r0:r1])
+            self.metrics.on_complete(req.latency_ms, req.queue_ms,
+                                     req.signal_bytes)
+            self._record(req, success=True)
+
+    # --- plan + staging ----------------------------------------------------
+    def _plan_candidate(self, problem: Problem) -> Candidate:
+        if self.config.backend is not None:
+            return Candidate(self.config.backend)
+        rigor = PlanRigor(self.config.rigor)
+        cache = self.session.plan_cache
+        key = PlanCache.plan_key(self.session.device_kind, problem, rigor,
+                                 scope="serve")
+        plan, _ = cache.plan(
+            key, lambda: make_plan(problem, rigor, wisdom=self.wisdom))
+        if plan is None:
+            raise ServeError(f"NULL plan for {problem.signature()} "
+                             f"(wisdom miss under wisdom_only rigor)")
+        return plan.candidate
+
+    def _executable(self, batch: Batch, bucket: int):
+        """The AOT-compiled, donated executable for this plan at the bucket
+        batch size — built once per (plan, bucket) via the shared
+        single-flight PlanCache."""
+        import jax
+        from ..core.clients.jax_fft import forward_fn
+
+        problem = Problem(batch.extents, batch.kind, batch.precision,
+                          batch=bucket)
+        cand = self._plan_candidate(problem)
+        key = PlanCache.executable_key(self.session.device_kind, problem,
+                                       cand, "serve_forward")
+
+        def build():
+            # Donation only pays off when XLA can alias input to output —
+            # c2c transforms, where shapes and dtypes match.  For r2c the
+            # real input can never back the complex output, and donating
+            # it just emits a warning per compile.
+            donate = (0,) if problem.complex_input else ()
+            fn = jax.jit(forward_fn(problem, cand), donate_argnums=donate)
+            spec = jax.ShapeDtypeStruct((bucket, *batch.extents),
+                                        problem.input_dtype.name)
+            return fn.lower(spec).compile()
+
+        compiled, _, _ = self.session.plan_cache.executable(key, build)
+        return compiled
+
+    def _stage(self, batch: Batch, bucket: int) -> np.ndarray:
+        """Copy request payloads into one of two alternating host staging
+        buffers (double buffering: buffer k-1 may still be uploading while
+        we fill buffer k)."""
+        problem = Problem(batch.extents, batch.kind, batch.precision)
+        skey = (batch.key, bucket)
+        with self._staging_lock:
+            bufs = self._staging.get(skey)
+            if bufs is None:
+                shape = (bucket, *batch.extents)
+                bufs = [np.zeros(shape, dtype=problem.input_dtype)
+                        for _ in range(2)]
+                self._staging[skey] = bufs
+                self._staging_flip[skey] = 0
+            flip = self._staging_flip[skey]
+            self._staging_flip[skey] = 1 - flip
+        buf = bufs[flip]
+        r0 = 0
+        for req in batch.requests:
+            buf[r0:r0 + req.rows] = req.payload
+            r0 += req.rows
+        return buf
+
+    # --- bookkeeping -------------------------------------------------------
+    def _fail(self, req: FFTRequest, err: ServeError,
+              timeout: bool = False) -> None:
+        req._complete(error=err)
+        self.metrics.on_error(timeout=timeout)
+        self._record(req, success=False, error=str(err))
+
+    def _record(self, req: FFTRequest, success: bool,
+                error: str = "") -> None:
+        if not self.config.record_requests:
+            return
+        try:
+            device = self.session.device_kind
+        except Exception:
+            device = "?"
+        row = Row(library="ServeFFT", device=device,
+                  extents=format_extents(req.extents),
+                  rank=len(req.extents),
+                  extent_class=classify(req.extents),
+                  precision=req.precision, kind=req.kind,
+                  rigor=self.config.rigor, run=req.rid, op="serve_request",
+                  time_ms=req.latency_ms if success else 0.0,
+                  bytes=req.signal_bytes, success=success, error=error)
+        with self._rows_lock:
+            self._rows.append(row)
+
+    def rows(self) -> list[Row]:
+        """Per-request result rows (op ``serve_request``; failed requests
+        carry their error) — feed them to a ResultSet for the shared
+        percentile aggregation."""
+        with self._rows_lock:
+            return list(self._rows)
+
+    def result_set(self):
+        from ..core.results import columns_for
+        from ..core.suite import ResultSet
+
+        return ResultSet(self.rows(), columns_for(False),
+                         plan_stats=self.session.plan_cache.stats)
+
+    def report(self) -> dict:
+        """Metrics snapshot including the shared plan cache's counters."""
+        return self.metrics.snapshot(plan_stats=self.session.plan_cache.stats)

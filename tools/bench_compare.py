@@ -30,6 +30,14 @@ class, merged into one document whose records carry a ``devices`` field:
 
     PYTHONPATH=src python tools/bench_compare.py --devices 1 2 4 8 \\
         --out BENCH_PR6.json
+
+With ``--serve`` the tool benches the FFT serving layer instead: a seeded
+Zipf mixed-shape replay per backend (p50/p95/p99 enqueue→complete latency,
+sustained GiB/s, coalesce + plan-cache counters) plus the coalesced-vs-
+serial same-shape burst whose ``speedup`` field is the coalescer's
+dispatch-amortization win:
+
+    PYTHONPATH=src python tools/bench_compare.py --serve --out BENCH_PR7.json
 """
 
 from __future__ import annotations
@@ -188,6 +196,134 @@ def bench_dist_backend(backend: str, extents: tuple[int, ...], batch: int,
     return rec
 
 
+#: Backends the serving replay is pinned to, plus the planner default
+#: (backend None → per-request plan selection through the shared cache).
+SERVE_BACKENDS = (None, "xla", "stockham_pallas")
+
+
+def bench_serve_replay(backend, requests: int, smoke: bool) -> dict:
+    """One seeded Zipf mixed-shape replay against a fresh service pinned to
+    ``backend`` (None = planner-selected); records tail latency, sustained
+    GiB/s, and the coalescing/cache counters."""
+    from repro.serve import FFTService, ServeConfig, TrafficSpec, replay
+
+    spec = TrafficSpec(
+        extents=(("256", "1024", "16x16") if smoke
+                 else ("1024", "4096", "256", "64x64")),
+        kinds=("Outplace_Complex",) if smoke
+        else ("Outplace_Complex", "Outplace_Real"),
+        precisions=("float",), requests=requests, rate_hz=0.0,
+        zipf_s=1.1, seed=2017)
+    rec = {"mode": "serve_replay", "backend": backend or "planned",
+           "traffic": spec.to_dict()}
+    try:
+        cfg = ServeConfig(coalesce_window_ms=2.0, max_batch=16,
+                          backend=backend)
+        with FFTService(config=cfg) as svc:
+            for ext, kind, prec in spec.mix():   # steady state, not compiles
+                svc.prewarm(ext, kind, prec)
+            rep = replay(svc, spec)
+        s = rep.service
+        lat = s.get("latency_ms", {})
+        rec.update(ok=True, requests=s["requests"], completed=s["completed"],
+                   errors=s["errors"], timeouts=s["timeouts"],
+                   batches=s["batches"],
+                   batched_requests=s["batched_requests"],
+                   coalesce_rate=s["coalesce_rate"], rps=s["rps"],
+                   gib_per_s=s["gib_per_s"], wall_s=rep.wall_s,
+                   mean_ms=lat.get("mean"), p50_ms=lat.get("p50"),
+                   p95_ms=lat.get("p95"), p99_ms=lat.get("p99"),
+                   plan_cache=s.get("plan_cache"))
+    except Exception as e:
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}")
+    return rec
+
+
+def bench_serve_burst(n_requests: int, ext: int = 4096) -> dict:
+    """Coalesced vs serial-FIFO throughput on a same-shape closed-loop
+    burst — the acceptance number for the coalescer (>= 2x on CPU).
+
+    Serial means what it says: one request per launch, one launch at a
+    time (window 0, max_batch 1, inflight 1).  Both sides use the batch
+    intake (``submit_many``) and a prewarmed executable ladder, so the
+    ratio isolates dispatch coalescing, not producer overhead or compiles.
+    """
+    from repro.serve import FFTService, ServeConfig
+
+    x = ((np.arange(ext) % 512) / 512.0).astype(np.complex64)
+
+    def run(cfg):
+        with FFTService(config=cfg) as svc:
+            svc.prewarm((ext,))                 # compiles outside the timing
+            t0 = time.perf_counter()
+            reqs = svc.submit_many([x] * n_requests)
+            for r in reqs:
+                r.result(timeout=600)
+            wall = time.perf_counter() - t0
+        rep = svc.report()
+        return n_requests / wall, rep["batches"]
+
+    rec = {"mode": "serve_burst", "extent": str(ext), "requests": n_requests}
+    try:
+        serial_rps, _ = run(ServeConfig(coalesce_window_ms=0.0, max_batch=1,
+                                        inflight=1, backend="xla"))
+        coalesced_rps, batches = run(ServeConfig(coalesce_window_ms=5.0,
+                                                 max_batch=32,
+                                                 backend="xla"))
+        rec.update(ok=True, serial_rps=serial_rps,
+                   coalesced_rps=coalesced_rps, coalesced_batches=batches,
+                   speedup=coalesced_rps / serial_rps)
+    except Exception as e:
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}")
+    return rec
+
+
+def _run_serve(args) -> int:
+    """The --serve grid: per-backend Zipf replays + the burst speedup."""
+    import jax
+
+    requests = 24 if args.smoke else 96
+    # a multiple of max_batch=32 (partially-filled batches linger for the
+    # full coalesce window) and large enough that per-burst fixed costs
+    # don't swamp the per-launch overhead the coalescer amortizes
+    burst = 128
+    dev = jax.devices()[0]
+    doc = {
+        "meta": {
+            "device_kind": dev.device_kind,
+            "platform": dev.platform,
+            "devices": jax.device_count(),
+            "interpret_kernels": dev.platform != "tpu",
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "note": "FFT serving layer: seeded Zipf mixed-shape replay per "
+                    "backend (p50/p95/p99 enqueue-to-complete) + coalesced "
+                    "vs serial same-shape burst",
+        },
+        "results": [],
+    }
+    for backend in SERVE_BACKENDS:
+        rec = bench_serve_replay(backend, requests, args.smoke)
+        doc["results"].append(rec)
+        status = (f"p50={rec['p50_ms']:8.1f} ms  p99={rec['p99_ms']:8.1f} ms "
+                  f"{rec['rps']:6.1f} rps  coalesce={rec['coalesce_rate']:.2f}"
+                  if rec["ok"] else f"failed: {rec['error']}")
+        print(f"serve_replay {rec['backend']:16s} {status}")
+    rec = bench_serve_burst(burst)
+    doc["results"].append(rec)
+    if rec["ok"]:
+        print(f"serve_burst  {'coalesced/serial':16s} "
+              f"{rec['serial_rps']:6.1f} -> {rec['coalesced_rps']:6.1f} rps "
+              f"({rec['speedup']:.1f}x)")
+    else:
+        print(f"serve_burst  failed: {rec['error']}")
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"wrote {len(doc['results'])} records to {args.out}")
+    return 0
+
+
 def _fan_out_devices(args, device_counts: list[int]) -> int:
     """Run the scaling grid: one subprocess per device count (the XLA host
     device count is frozen at first jax init), merge into one document."""
@@ -241,9 +377,16 @@ def main(argv=None) -> int:
                    help="device-count scaling axis, e.g. --devices 1 2 4 8 "
                         "(one subprocess per count; benches xla + the "
                         "distributed decompositions)")
+    p.add_argument("--serve", action="store_true",
+                   help="bench the FFT serving layer instead of raw "
+                        "transforms: per-backend Zipf mixed-shape replays "
+                        "(tail latency, GiB/s, coalesce rate) + the "
+                        "coalesced-vs-serial burst speedup")
     p.add_argument("--_worker", action="store_true", help=argparse.SUPPRESS)
     args = p.parse_args(argv)
 
+    if args.serve:
+        return _run_serve(args)
     if args.devices:
         return _fan_out_devices(args, args.devices)
 
