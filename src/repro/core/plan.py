@@ -25,7 +25,8 @@ from typing import Any, Callable, Sequence
 import numpy as np
 
 from .client import Problem
-from .extents import _factors_only, next_pow2 as _next_pow2, next_smooth
+from .extents import (_factors_only, classify, next_pow2 as _next_pow2,
+                      next_smooth)
 
 
 class PlanRigor(enum.Enum):
@@ -88,6 +89,130 @@ class Plan:
     rigor: PlanRigor
     plan_time_ms: float = 0.0
     measured_ms: dict[str, float] = field(default_factory=dict)  # per-candidate timings
+    fallbacks: tuple[str, ...] = ()   # candidate keys demoted before this one
+
+
+# ---------------------------------------------------------------------------
+# Backend quarantine: circuit breaker over (backend, problem-class) pairs
+# ---------------------------------------------------------------------------
+def problem_class(problem: Problem) -> str:
+    """The quarantine granularity: a backend that fails for one oddshape
+    rank-2 problem is suspect for every oddshape rank-2 problem, but a
+    powerof2 rank-1 success says nothing about either."""
+    return f"{classify(problem.extents)}|r{problem.rank}"
+
+
+def breaker_key(backend: str, problem: Problem) -> str:
+    return f"{backend}|{problem_class(problem)}"
+
+
+class CircuitBreaker:
+    """Quarantine for (backend, problem-class) pairs that keep failing.
+
+    Classic three-state breaker, keyed by :func:`breaker_key`:
+
+      closed     pair is healthy; every attempt allowed
+      open       ``threshold`` consecutive failures seen — attempts denied
+                 until ``cooldown_s`` elapses
+      half_open  cooldown elapsed; exactly ONE probe attempt is allowed
+                 through.  Success re-closes the breaker, failure re-opens
+                 it (and restarts the cooldown).  If the probe never
+                 resolves (its thread died), a fresh probe is allowed after
+                 another cooldown, so a lost probe can't wedge the pair
+                 open forever.
+
+    Thread-safe: all transitions happen under one lock, and the totals
+    (``failures``/``successes``) are exact counts of the record calls —
+    the invariant the threaded hammer test pins.  ``clock`` is injectable
+    for deterministic tests.
+    """
+
+    CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
+
+    def __init__(self, threshold: int = 3, cooldown_s: float = 30.0,
+                 clock: Callable[[], float] = time.monotonic):
+        if threshold < 1:
+            raise ValueError(f"breaker threshold must be >= 1: {threshold}")
+        self.threshold = int(threshold)
+        self.cooldown_s = float(cooldown_s)
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._entries: dict[str, dict] = {}
+
+    def _entry(self, key: str) -> dict:
+        e = self._entries.get(key)
+        if e is None:
+            e = self._entries[key] = {
+                "state": self.CLOSED, "consecutive": 0, "failures": 0,
+                "successes": 0, "opens": 0, "opened_at": 0.0,
+                "probe_at": None}
+        return e
+
+    def allows(self, key: str) -> bool:
+        """May the caller *attempt* this pair right now?  Claims the
+        half-open probe slot when it grants one — call only when about to
+        actually try (use :meth:`available` for side-effect-free checks)."""
+        now = self._clock()
+        with self._lock:
+            e = self._entry(key)
+            if e["state"] == self.CLOSED:
+                return True
+            if e["state"] == self.OPEN:
+                if now - e["opened_at"] < self.cooldown_s:
+                    return False
+                e["state"] = self.HALF_OPEN
+                e["probe_at"] = now
+                return True       # the cooldown-expiry probe
+            # HALF_OPEN: one outstanding probe at a time
+            if e["probe_at"] is not None \
+                    and now - e["probe_at"] < self.cooldown_s:
+                return False
+            e["probe_at"] = now   # previous probe was lost; allow another
+            return True
+
+    def available(self, key: str) -> bool:
+        """Side-effect-free: would an attempt plausibly be allowed?"""
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None or e["state"] != self.OPEN:
+                return True
+            return self._clock() - e["opened_at"] >= self.cooldown_s
+
+    def record_failure(self, key: str) -> str:
+        """Count a failure; returns the pair's new state (``'open'`` means
+        this failure tripped — or re-tripped — the quarantine)."""
+        with self._lock:
+            e = self._entry(key)
+            e["failures"] += 1
+            e["consecutive"] += 1
+            if e["state"] == self.HALF_OPEN \
+                    or e["consecutive"] >= self.threshold:
+                if e["state"] != self.OPEN:
+                    e["opens"] += 1
+                e["state"] = self.OPEN
+                e["opened_at"] = self._clock()
+                e["probe_at"] = None
+            return e["state"]
+
+    def record_success(self, key: str) -> str:
+        with self._lock:
+            e = self._entry(key)
+            e["successes"] += 1
+            e["consecutive"] = 0
+            e["state"] = self.CLOSED
+            e["probe_at"] = None
+            return e["state"]
+
+    def state(self, key: str) -> str:
+        with self._lock:
+            e = self._entries.get(key)
+            return e["state"] if e else self.CLOSED
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {k: {"state": e["state"], "failures": e["failures"],
+                        "successes": e["successes"], "opens": e["opens"]}
+                    for k, e in self._entries.items()}
 
 
 # ---------------------------------------------------------------------------
@@ -788,6 +913,40 @@ def estimate_choice(problem: Problem) -> Candidate:
     return by_backend.get("xla", by_backend["bluestein"])
 
 
+def fallback_chain(problem: Problem, patient: bool = False,
+                   mesh=None) -> list[Candidate]:
+    """The ordered degradation path: ESTIMATE's pick first (its dft pin for
+    tiny rank-1 problems included), then every other feasible candidate by
+    ascending modeled cost, with a plain ``xla`` candidate guaranteed
+    present — the always-feasible terminal fallback.  Pure ordering: the
+    walkers (:func:`make_plan`'s fault-tolerant mode, the serve engine)
+    apply wisdom-demotion and circuit-breaker filtering at try time."""
+    cands = candidates(problem, patient=patient, mesh=mesh)
+    scored = [(estimate_bytes_moved(problem, c), i, c)
+              for i, c in enumerate(cands)]
+    ranked = [c for cost, _, c in sorted(scored, key=lambda t: t[:2])
+              if cost != float("inf")]
+    top = estimate_choice(problem)
+    chain = [top] + [c for c in ranked if c.key() != top.key()]
+    if not any(c.backend == "xla" and not c.axes for c in chain):
+        chain.append(Candidate("xla"))
+    return chain
+
+
+def probe_finite(fn: Callable, problem: Problem) -> None:
+    """Cheap output-finiteness probe: push one all-ones batch through a
+    freshly built executable and reject it on any non-finite output — the
+    'compiles fine, computes garbage' failure mode a build error misses."""
+    x = np.ones((problem.batch, *problem.extents), dtype=problem.real_dtype)
+    if problem.complex_input:
+        x = x.astype(problem.input_dtype)
+    out = np.asarray(fn(x))
+    if not np.isfinite(out).all():
+        raise RuntimeError(
+            f"finiteness probe failed for {problem.signature()}: "
+            f"executable produced non-finite output")
+
+
 def measure_plan(problem: Problem, build: Callable[[Candidate], Callable],
                  cands: Sequence[Candidate], reps: int = 3) -> tuple[Candidate, dict[str, float]]:
     """MEASURE: compile + run each candidate, return fastest + timing table."""
@@ -819,15 +978,78 @@ def measure_plan(problem: Problem, build: Callable[[Candidate], Callable],
     return best_cand, timings
 
 
+def _demoted_backends(wisdom, problem: Problem) -> frozenset:
+    """Backends wisdom has quarantined for this problem-class (empty when
+    the wisdom store is absent or predates demotion records)."""
+    if wisdom is None:
+        return frozenset()
+    demoted = getattr(wisdom, "demoted", None)
+    return demoted(problem) if callable(demoted) else frozenset()
+
+
+def _fallback_plan(problem: Problem, rigor: PlanRigor,
+                   build: Callable[[Candidate], Callable], wisdom,
+                   breaker: CircuitBreaker, probe: bool, t0: float,
+                   demoted: frozenset) -> Plan:
+    """Fault-tolerant planning: walk the cost-ordered fallback chain,
+    demoting past candidates that fail at build (or at the optional
+    finiteness probe), with circuit-breaker bookkeeping per (backend,
+    problem-class) pair.  A demotion that OPENS the breaker is persisted to
+    wisdom so warm sessions skip the known-bad pick outright.  The terminal
+    candidate — by construction a plain ``xla`` is always in the chain —
+    is tried regardless of quarantine state."""
+    chain = fallback_chain(problem, patient=(rigor is PlanRigor.PATIENT))
+    fallbacks: list[str] = []
+    last_err: Exception | None = None
+    for i, cand in enumerate(chain):
+        terminal = i == len(chain) - 1
+        is_xla = cand.backend == "xla" and not cand.axes
+        if not terminal and not is_xla:
+            if cand.backend in demoted:
+                fallbacks.append(cand.key())
+                continue
+            if not breaker.allows(breaker_key(cand.backend, problem)):
+                fallbacks.append(cand.key())
+                continue
+        try:
+            fn = build(cand)
+            if probe:
+                probe_finite(fn, problem)
+        except Exception as e:
+            last_err = e
+            state = breaker.record_failure(breaker_key(cand.backend, problem))
+            if wisdom is not None and not is_xla \
+                    and state == CircuitBreaker.OPEN:
+                wisdom.record_demotion(problem, cand.backend)
+            fallbacks.append(cand.key())
+            continue
+        breaker.record_success(breaker_key(cand.backend, problem))
+        return Plan(problem, cand, rigor, (time.perf_counter() - t0) * 1e3,
+                    fallbacks=tuple(fallbacks))
+    raise RuntimeError(
+        f"no feasible plan for {problem.signature()}: all {len(chain)} "
+        f"candidates failed (last: {type(last_err).__name__}: {last_err})")
+
+
 def make_plan(problem: Problem, rigor: PlanRigor,
               build: Callable[[Candidate], Callable] | None = None,
-              wisdom=None) -> Plan | None:
+              wisdom=None, breaker: CircuitBreaker | None = None,
+              probe: bool = False) -> Plan | None:
     """The planner. Returns None for WISDOM_ONLY misses (fftw NULL plan).
 
     MEASURE/PATIENT consult wisdom first, fftw-style: a persisted selection
     for this (device, problem) short-circuits the candidate sweep entirely,
     so a warm Session (or a second process sharing the wisdom file) plans in
     microseconds instead of re-compiling every candidate.
+
+    Fault tolerance: with both ``build`` and ``breaker`` supplied, planning
+    walks the :func:`fallback_chain` instead — each candidate is actually
+    built (and optionally finiteness-probed with ``probe=True``) before it
+    is returned, failures demote to the next candidate by modeled cost, and
+    the (backend, problem-class) pair is quarantined in the breaker; see
+    :func:`_fallback_plan`.  Without a breaker, behavior is unchanged except
+    that wisdom-recorded demotions steer the ESTIMATE pick away from
+    known-bad backends.
     """
     t0 = time.perf_counter()
     if rigor is PlanRigor.WISDOM_ONLY:
@@ -838,15 +1060,30 @@ def make_plan(problem: Problem, rigor: PlanRigor,
             return None
         return Plan(problem, cand, rigor, (time.perf_counter() - t0) * 1e3)
 
+    demoted = _demoted_backends(wisdom, problem)
     if wisdom is not None and rigor in (PlanRigor.MEASURE, PlanRigor.PATIENT):
         cand = wisdom.lookup(problem)
-        if cand is not None:   # tuned knobs persisted by an earlier sweep
+        if cand is not None and cand.backend not in demoted:
+            # tuned knobs persisted by an earlier sweep
             return Plan(problem, cand, rigor, (time.perf_counter() - t0) * 1e3)
+
+    if build is not None and breaker is not None:
+        return _fallback_plan(problem, rigor, build, wisdom, breaker, probe,
+                              t0, demoted)
 
     if rigor is PlanRigor.ESTIMATE or build is None:
         cand, timings = estimate_choice(problem), {}
+        if cand.backend in demoted and cand.backend != "xla":
+            # warm session: skip the known-bad pick without a live breaker
+            for c in fallback_chain(problem):
+                if c.backend == "xla" or c.backend not in demoted:
+                    cand = c
+                    break
     else:
         cands = candidates(problem, patient=(rigor is PlanRigor.PATIENT))
+        if demoted:
+            cands = [c for c in cands
+                     if c.backend == "xla" or c.backend not in demoted]
         cand, timings = measure_plan(problem, build, cands)
     plan = Plan(problem, cand, rigor, (time.perf_counter() - t0) * 1e3, timings)
     # persist only selections a sweep actually timed: a build-less

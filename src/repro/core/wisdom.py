@@ -18,14 +18,24 @@ import warnings
 from typing import Optional
 
 from .client import Problem
-from .plan import Candidate, PlanRigor
+from .plan import Candidate, PlanRigor, problem_class
 
 
 DEFAULT_PATH = os.path.expanduser("~/.cache/repro/wisdom.json")
 
+#: Schema version stamped into every record this writer produces.  Loaders
+#: keep records at or below their own version (missing ``v`` = version 1,
+#: the pre-versioning layout) and skip-and-warn on anything newer or
+#: malformed — a future writer sharing the file must never crash this one.
+WISDOM_SCHEMA_VERSION = 2
+
+#: Store key holding backend demotions (known-bad picks), not a selection:
+#: ``{f"{device_kind}|{problem_class}": [backend, ...]}``.
+_DEMOTED_KEY = "__demoted__"
+
 
 def _candidate_to_record(cand: Candidate) -> dict:
-    rec = {"backend": cand.backend,
+    rec = {"v": WISDOM_SCHEMA_VERSION, "backend": cand.backend,
            "options": [list(kv) for kv in cand.options]}
     if cand.axes:   # per-axis ND assignment: recurse (old records omit it)
         rec["axes"] = [_candidate_to_record(a) for a in cand.axes]
@@ -57,18 +67,55 @@ class Wisdom:
     def _read_disk(self) -> dict:
         """Best-effort load: a missing file is an empty store, and so is a
         corrupt/truncated one (warn, don't crash) — a concurrent session
-        must never take the whole benchmark down."""
+        must never take the whole benchmark down.  Individual entries are
+        validated too: an unparseable record or one written by a future
+        schema version is skipped with a warning rather than poisoning the
+        load (see :data:`WISDOM_SCHEMA_VERSION`)."""
         try:
             with open(self.path) as f:
                 store = json.load(f)
             if not isinstance(store, dict):
                 raise ValueError(f"wisdom root is {type(store).__name__}")
-            return store
         except FileNotFoundError:
             return {}
         except (json.JSONDecodeError, OSError, ValueError) as e:
             warnings.warn(f"ignoring unreadable wisdom at {self.path}: {e}")
             return {}
+        clean: dict[str, dict] = {}
+        for key, rec in store.items():
+            why = self._invalid_reason(key, rec)
+            if why is None:
+                clean[key] = rec
+            else:
+                warnings.warn(
+                    f"skipping wisdom entry {key!r} in {self.path}: {why}")
+        return clean
+
+    @staticmethod
+    def _invalid_reason(key: str, rec) -> Optional[str]:
+        """None for a loadable entry, else a human-readable skip reason."""
+        if key == _DEMOTED_KEY:
+            if isinstance(rec, dict) and all(
+                    isinstance(v, list) and all(isinstance(b, str) for b in v)
+                    for v in rec.values()):
+                return None
+            return "malformed demotion table"
+        if not isinstance(rec, dict):
+            return f"record is {type(rec).__name__}, not an object"
+        v = rec.get("v", 1)
+        if not isinstance(v, int) or v < 1:
+            return f"bad schema version {v!r}"
+        if v > WISDOM_SCHEMA_VERSION:
+            return (f"schema version {v} is newer than this reader "
+                    f"(v{WISDOM_SCHEMA_VERSION})")
+        if not isinstance(rec.get("backend"), str) \
+                or not isinstance(rec.get("options"), list):
+            return "missing/malformed backend or options"
+        try:
+            _candidate_from_record(rec)
+        except Exception as e:
+            return f"unparseable candidate ({type(e).__name__}: {e})"
+        return None
 
     def _key(self, problem: Problem, scope: str = "") -> str:
         """Unscoped keys hold the open planner's (Planned client) choices —
@@ -91,6 +138,24 @@ class Wisdom:
         with self._lock:
             self._store[self._key(problem, scope)] = _candidate_to_record(cand)
 
+    # --- demotions: known-bad (backend, problem-class) pairs --------------
+    def _demote_key(self, problem: Problem) -> str:
+        return f"{self.device_kind}|{problem_class(problem)}"
+
+    def record_demotion(self, problem: Problem, backend: str) -> None:
+        """Persistably quarantine ``backend`` for this problem-class: warm
+        sessions (and the planner's ESTIMATE path) skip it outright."""
+        with self._lock:
+            table = self._store.setdefault(_DEMOTED_KEY, {})
+            row = table.setdefault(self._demote_key(problem), [])
+            if backend not in row:
+                row.append(backend)
+
+    def demoted(self, problem: Problem) -> frozenset:
+        with self._lock:
+            table = self._store.get(_DEMOTED_KEY, {})
+            return frozenset(table.get(self._demote_key(problem), ()))
+
     def save(self) -> None:
         """Atomic, concurrent-tolerant write.
 
@@ -104,7 +169,17 @@ class Wisdom:
         os.makedirs(d, exist_ok=True)
         with self._lock:
             merged = self._read_disk()
+            # demotions union across sessions: a pair one session proved bad
+            # stays quarantined even when another session saves concurrently
+            disk_dem = merged.get(_DEMOTED_KEY, {})
+            ours_dem = self._store.get(_DEMOTED_KEY, {})
+            union = {k: list(v) for k, v in disk_dem.items()}
+            for k, backends in ours_dem.items():
+                row = union.setdefault(k, [])
+                row += [b for b in backends if b not in row]
             merged.update(self._store)
+            if union:
+                merged[_DEMOTED_KEY] = union
             self._store = merged
             snapshot = dict(merged)
         fd, tmp = tempfile.mkstemp(dir=d, prefix=".wisdom-", suffix=".tmp")
@@ -123,7 +198,7 @@ class Wisdom:
 
     def __len__(self) -> int:
         with self._lock:
-            return len(self._store)
+            return len(self._store) - (_DEMOTED_KEY in self._store)
 
 
 def generate(sizes, path: str = DEFAULT_PATH, rigor: PlanRigor = PlanRigor.PATIENT,

@@ -8,9 +8,13 @@ same-plan requests into one batched launch buy.
 Entry points:
 
 * :class:`FFTService` / :class:`ServeConfig` — the engine: bounded queue,
-  coalescer, double-buffered worker loop over a shared Session.
+  coalescer, double-buffered worker loop over a shared Session, plus the
+  fault-tolerance machinery (fallback chains, retries, batch bisection,
+  watchdog).
 * :class:`TrafficSpec` / :func:`replay` — seeded Zipf mixed-shape traffic
   at a configurable arrival rate.
+* :class:`FaultPlan` / :func:`chaos_replay` — deterministic fault
+  injection and the graded recovery replay CI's chaos-smoke step runs.
 * ``benchmarks/table_serve.py`` and ``tools/bench_compare.py --serve`` —
   the reporting surfaces.
 """
@@ -20,11 +24,16 @@ from .request import (FFTRequest, QueueFull, RequestTimeout, ServeError,
 from .queue import RequestQueue
 from .coalescer import Batch, Coalescer
 from .metrics import ServiceMetrics
-from .engine import FFTService, ServeConfig
-from .replay import ReplayReport, TrafficSpec, replay
+from .faults import (FaultInjected, FaultPlan, FaultRule, WorkerKilled,
+                     faulty_build)
+from .engine import FFTService, ServeConfig, WorkerWedged
+from .replay import (ChaosReport, ReplayReport, TrafficSpec, chaos_replay,
+                     replay)
 
 __all__ = [
-    "Batch", "Coalescer", "FFTRequest", "FFTService", "QueueFull",
-    "ReplayReport", "RequestQueue", "RequestTimeout", "ServeConfig",
-    "ServeError", "ServiceMetrics", "TrafficSpec", "make_request", "replay",
+    "Batch", "ChaosReport", "Coalescer", "FFTRequest", "FFTService",
+    "FaultInjected", "FaultPlan", "FaultRule", "QueueFull", "ReplayReport",
+    "RequestQueue", "RequestTimeout", "ServeConfig", "ServeError",
+    "ServiceMetrics", "TrafficSpec", "WorkerKilled", "WorkerWedged",
+    "chaos_replay", "faulty_build", "make_request", "replay",
 ]

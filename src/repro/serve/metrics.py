@@ -11,8 +11,13 @@ worker threads.  ``snapshot()`` renders the serving report:
   so serving numbers compare against the offline trajectory);
 * coalescing counters: batches launched vs. requests served — a coalesce
   rate of ``1 - batches/requests`` — plus padded rows (bucket slack);
-* failure counters (errors, timeouts) and, when a plan cache is attached,
-  its hit/miss totals.
+* failure counters, each its own column: engine errors, deadline timeouts,
+  backpressure sheds, retries (and how many of them ultimately succeeded);
+* robustness counters: plan demotions (fallback-chain hops past a failed
+  backend), batch bisections, injected faults, watchdog worker restarts,
+  wedged workers at shutdown;
+* when a plan cache / circuit breaker is attached, its hit/miss totals and
+  the per-(backend, problem-class) quarantine states.
 """
 
 from __future__ import annotations
@@ -40,8 +45,16 @@ class ServiceMetrics:
         self._rng_state = 0x9E3779B97F4A7C15
         self.submitted = 0
         self.completed = 0
-        self.errors = 0
+        self.errors = 0                   # engine errors (non-timeout)
         self.timeouts = 0
+        self.sheds = 0                    # QueueFull rejections at submit
+        self.retries = 0                  # re-enqueues after a failure
+        self.retry_successes = 0          # completions that needed >=1 retry
+        self.demotions = 0                # fallback hops past a bad backend
+        self.bisections = 0               # failed-batch splits
+        self.faults_injected = 0          # chaos: FaultPlan rules fired
+        self.worker_restarts = 0          # watchdog thread replacements
+        self.wedged = 0                   # workers alive past stop() joins
         self.batches = 0
         self.batched_requests = 0         # requests served in size>1 batches
         self.padded_rows = 0              # bucket slack rows computed
@@ -78,13 +91,15 @@ class ServiceMetrics:
             self.padded_rows += padded_rows
 
     def on_complete(self, latency_ms: float, queue_ms: float,
-                    nbytes: int) -> None:
+                    nbytes: int, retried: bool = False) -> None:
         with self._lock:
             self.completed += 1
             self._seen += 1
             self._keep(self._latencies_ms, latency_ms)
             self._keep(self._queue_ms, queue_ms)
             self.bytes_moved += 2 * nbytes   # one read + one write
+            if retried:
+                self.retry_successes += 1
             self.t_last = time.perf_counter()
 
     def on_error(self, timeout: bool = False) -> None:
@@ -94,8 +109,36 @@ class ServiceMetrics:
             else:
                 self.errors += 1
 
+    def on_shed(self, n: int = 1) -> None:
+        with self._lock:
+            self.sheds += n
+
+    def on_retry(self) -> None:
+        with self._lock:
+            self.retries += 1
+
+    def on_demotion(self, n: int = 1) -> None:
+        with self._lock:
+            self.demotions += n
+
+    def on_bisect(self) -> None:
+        with self._lock:
+            self.bisections += 1
+
+    def on_fault(self, n: int = 1) -> None:
+        with self._lock:
+            self.faults_injected += n
+
+    def on_worker_restart(self) -> None:
+        with self._lock:
+            self.worker_restarts += 1
+
+    def on_wedge(self, n: int = 1) -> None:
+        with self._lock:
+            self.wedged += n
+
     # --- report ------------------------------------------------------------
-    def snapshot(self, plan_stats=None) -> dict:
+    def snapshot(self, plan_stats=None, quarantine=None) -> dict:
         """The serving report, as plain data (JSON-ready)."""
         with self._lock:
             lat = list(self._latencies_ms)
@@ -106,6 +149,14 @@ class ServiceMetrics:
                 "completed": self.completed,
                 "errors": self.errors,
                 "timeouts": self.timeouts,
+                "sheds": self.sheds,
+                "retries": self.retries,
+                "retry_successes": self.retry_successes,
+                "demotions": self.demotions,
+                "bisections": self.bisections,
+                "faults_injected": self.faults_injected,
+                "worker_restarts": self.worker_restarts,
+                "wedged": self.wedged,
                 "batches": self.batches,
                 "batched_requests": self.batched_requests,
                 "padded_rows": self.padded_rows,
@@ -122,4 +173,6 @@ class ServiceMetrics:
                                **percentile_summary(qms)}
         if plan_stats is not None:
             out["plan_cache"] = plan_stats.as_dict()
+        if quarantine is not None:
+            out["quarantine"] = quarantine
         return out

@@ -49,7 +49,9 @@ class RequestQueue:
             if len(self._q) >= self.maxsize:
                 if not block:
                     raise QueueFull(
-                        f"queue full ({self.maxsize} requests pending)")
+                        f"queue full: {len(self._q)}/{self.maxsize} requests "
+                        f"pending (raise ServeConfig.max_queue, or back off "
+                        f"the producer)")
                 deadline = (time.perf_counter() + timeout
                             if timeout is not None else None)
                 while len(self._q) >= self.maxsize and not self._closed:
@@ -57,7 +59,8 @@ class RequestQueue:
                                  if deadline is not None else None)
                     if remaining is not None and remaining <= 0:
                         raise QueueFull(
-                            f"queue full after waiting {timeout}s")
+                            f"queue still full after waiting {timeout}s: "
+                            f"{len(self._q)}/{self.maxsize} requests pending")
                     self._not_full.wait(remaining)
                 if self._closed:
                     raise QueueFull("queue is closed")
@@ -90,7 +93,9 @@ class RequestQueue:
                                  if deadline is not None else None)
                     if remaining is not None and remaining <= 0:
                         raise QueueFull(
-                            f"queue full after waiting {timeout}s")
+                            f"queue cannot take {len(reqs)} more requests "
+                            f"after waiting {timeout}s "
+                            f"({len(self._q)}/{self.maxsize} pending)")
                     self._not_full.wait(remaining)
                 if self._closed:
                     raise QueueFull("queue is closed")
@@ -99,6 +104,19 @@ class RequestQueue:
                 req.t_enqueue = now
                 self._q.append(req)
             self._not_empty.notify()
+
+    def requeue(self, req: FFTRequest) -> bool:
+        """Re-admit a request the engine is retrying.  Deliberately ignores
+        ``maxsize`` — a retry blocking behind fresh intake would deadlock
+        the backoff timer thread — but respects ``closed`` (returns False;
+        the caller fails the request cleanly).  Re-entered at the FRONT:
+        the request's original arrival predates everything queued now."""
+        with self._lock:
+            if self._closed:
+                return False
+            self._q.appendleft(req)
+            self._not_empty.notify()
+            return True
 
     # --- consumer side -----------------------------------------------------
     def get(self, timeout: Optional[float] = None) -> Optional[FFTRequest]:

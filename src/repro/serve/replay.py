@@ -20,6 +20,14 @@ mix declaratively, with the same round-trip discipline as SuiteSpec:
 the spec and returns a :class:`ReplayReport` carrying the service metrics
 snapshot (p50/p95/p99, sustained GiB/s, coalesce + cache counters) plus
 per-mix-entry breakdowns.
+
+``chaos_replay()`` is the fault-tolerance variant: the spec carries a
+seeded :class:`~repro.serve.faults.FaultPlan` (``faults=``), the replay
+runs under injection, and the :class:`ChaosReport` grades the outcome —
+delivered-success rate over the *non-poisoned* requests (a poisoned
+request is one an unbounded error rule targets; nothing can save it),
+tail-latency inflation against an optional clean baseline, and zero-wedge
+invariants.  CI's chaos-smoke step is just this with fixed seeds.
 """
 
 from __future__ import annotations
@@ -48,6 +56,7 @@ class TrafficSpec:
     batch: int = 1               # rows per request
     seed: int = 2017
     timeout_ms: Optional[float] = None   # per-request deadline
+    faults: tuple = ()           # FaultRule dicts: chaos injection schedule
 
     def __post_init__(self):
         norm = object.__setattr__
@@ -56,6 +65,13 @@ class TrafficSpec:
             for e in self.extents))
         norm(self, "kinds", tuple(self.kinds))
         norm(self, "precisions", tuple(self.precisions))
+        # validate + normalize fault rules to plain dicts (JSON-ready, same
+        # round-trip discipline as the rest of the spec)
+        from .faults import FaultRule
+        norm(self, "faults", tuple(
+            (r if isinstance(r, FaultRule)
+             else FaultRule.from_dict(dict(r))).to_dict()
+            for r in self.faults))
         if not self.extents:
             raise ValueError("traffic spec needs at least one extent")
         bad = set(self.kinds) - set(KINDS)
@@ -98,6 +114,13 @@ class TrafficSpec:
             idx = int(rng.choice(len(mix), p=w))
             yield t, *mix[idx]
 
+    def fault_plan(self):
+        """The spec's injection schedule as a live (counter-carrying)
+        FaultPlan — build a fresh one per replay so nth-call windows start
+        from zero."""
+        from .faults import FaultPlan
+        return FaultPlan(self.faults, seed=self.seed)
+
     # --- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
         d = {"extents": [format_extents(e) for e in self.extents],
@@ -106,6 +129,8 @@ class TrafficSpec:
              "zipf_s": self.zipf_s, "batch": self.batch, "seed": self.seed}
         if self.timeout_ms is not None:
             d["timeout_ms"] = self.timeout_ms
+        if self.faults:
+            d["faults"] = [dict(r) for r in self.faults]
         return d
 
     @classmethod
@@ -199,3 +224,103 @@ def replay(service, spec: TrafficSpec,
         per_mix.append(entry)
     return ReplayReport(traffic=spec.to_dict(), service=service.report(),
                         wall_s=wall, per_mix=per_mix, requests=submitted)
+
+
+@dataclass
+class ChaosReport:
+    """A graded chaos replay: the ordinary replay report plus the
+    fault-tolerance verdict.
+
+    ``clean_success_rate`` is the number the acceptance gate watches: of
+    the requests *no injected fault dooms outright* (see
+    :meth:`FaultPlan.is_poison`), what fraction still delivered a result —
+    through fallback, retry, bisection, or watchdog recovery.  ``violations``
+    is empty when every invariant held; each entry is a human-readable
+    sentence naming the broken one.
+    """
+
+    replay: ReplayReport
+    faults: dict                     # FaultPlan.snapshot() after the run
+    total: int = 0
+    poisoned: int = 0                # requests no recovery could save
+    clean_ok: int = 0                # non-poisoned requests that succeeded
+    success_rate: float = 0.0        # over all requests
+    clean_success_rate: float = 0.0  # over non-poisoned requests
+    violations: list[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_dict(self) -> dict:
+        return {**self.replay.to_dict(), "faults": self.faults,
+                "total": self.total, "poisoned": self.poisoned,
+                "clean_ok": self.clean_ok,
+                "success_rate": self.success_rate,
+                "clean_success_rate": self.clean_success_rate,
+                "violations": list(self.violations), "ok": self.ok}
+
+
+def chaos_replay(service, spec: TrafficSpec, wait_timeout_s: float = 120.0,
+                 min_clean_success: float = 1.0,
+                 baseline_p99_ms: Optional[float] = None,
+                 max_p99_inflation: float = 50.0) -> ChaosReport:
+    """Replay ``spec`` under its fault schedule and grade the recovery.
+
+    The spec's ``faults`` become the service's live FaultPlan (unless the
+    service already carries one — e.g. rid-pinned poison rules built after
+    request creation).  Invariants checked:
+
+    * ``clean_success_rate >= min_clean_success`` — every request the fault
+      schedule didn't doom outright must still be served;
+    * no wedged workers, and no worker error that isn't an injected kill
+      (the engine must degrade, not die);
+    * optionally, delivered p99 latency stays within ``max_p99_inflation``×
+      a fault-free ``baseline_p99_ms`` (off unless a baseline is given).
+    """
+    plan = service.fault_plan
+    if plan is None or (not plan and spec.faults):
+        plan = spec.fault_plan()
+        service.fault_plan = plan
+    rep = replay(service, spec, wait_timeout_s=wait_timeout_s)
+
+    total = len(rep.requests)
+    poisoned = clean_ok = ok_all = 0
+    for req in rep.requests:
+        doomed = plan is not None and plan.is_poison(req.extents, req.kind,
+                                                     rid=req.rid)
+        if req.ok:
+            ok_all += 1
+        if doomed:
+            poisoned += 1
+        elif req.ok:
+            clean_ok += 1
+    clean_total = total - poisoned
+    success_rate = ok_all / total if total else 0.0
+    clean_rate = clean_ok / clean_total if clean_total else 1.0
+
+    violations: list[str] = []
+    snap = rep.service
+    if clean_rate < min_clean_success:
+        violations.append(
+            f"clean success rate {clean_rate:.3f} below required "
+            f"{min_clean_success:.3f} ({clean_ok}/{clean_total} non-poisoned "
+            f"requests delivered)")
+    if snap.get("wedged", 0):
+        violations.append(f"{snap['wedged']} worker(s) wedged")
+    stray = [e for e in snap.get("worker_errors", ())
+             if not e.startswith("WorkerKilled")]
+    if stray:
+        violations.append(f"unexpected worker error(s): {stray}")
+    if baseline_p99_ms is not None and "latency_ms" in snap:
+        p99 = snap["latency_ms"]["p99"]
+        if p99 > baseline_p99_ms * max_p99_inflation:
+            violations.append(
+                f"p99 {p99:.1f} ms exceeds {max_p99_inflation:.0f}x the "
+                f"fault-free baseline ({baseline_p99_ms:.1f} ms)")
+
+    return ChaosReport(replay=rep,
+                       faults=plan.snapshot() if plan is not None else {},
+                       total=total, poisoned=poisoned, clean_ok=clean_ok,
+                       success_rate=success_rate,
+                       clean_success_rate=clean_rate, violations=violations)

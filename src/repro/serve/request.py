@@ -34,16 +34,25 @@ from ..core.client import KINDS, PRECISIONS, Problem
 class ServeError(RuntimeError):
     """A request failed inside the service (engine error or timeout).
     The failure is recorded as a clean error result row — the worker loop
-    itself never dies with the request."""
+    itself never dies with the request.  ``retryable`` marks whether the
+    engine may re-enqueue the request (with backoff) instead of failing it;
+    engine errors default to retryable, deadline/backpressure failures
+    don't (retrying an expired request only wastes a worker's time)."""
+
+    retryable = True
 
 
 class RequestTimeout(ServeError):
     """The request's deadline passed before its result was produced."""
 
+    retryable = False
+
 
 class QueueFull(ServeError):
     """Backpressure: the bounded request queue rejected a non-blocking
     submit (or a blocking one timed out waiting for space)."""
+
+    retryable = False
 
 
 _req_ids = itertools.count()
@@ -69,6 +78,9 @@ class FFTRequest:
     _result: Optional[np.ndarray] = None
     _error: Optional[ServeError] = None
     coalesced: int = 0                  # batch size this request rode in
+    # --- fault tolerance ----------------------------------------------------
+    retries_left: int = 0               # re-enqueues the engine may still do
+    attempts: int = 0                   # dispatch attempts consumed so far
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -140,12 +152,15 @@ class FFTRequest:
 
 def make_request(payload: np.ndarray, kind: str = "Outplace_Complex",
                  precision: Optional[str] = None, rank: Optional[int] = None,
-                 timeout_ms: Optional[float] = None) -> FFTRequest:
+                 timeout_ms: Optional[float] = None,
+                 retries: int = 0) -> FFTRequest:
     """Build a request from a host array.
 
     ``rank`` splits the leading axes into batch rows vs. transform extents
     (default: the whole shape is one transform, rows=1).  ``precision`` is
-    inferred from the dtype when omitted.
+    inferred from the dtype when omitted.  ``retries`` seeds
+    ``retries_left`` (the service overrides it with its configured policy
+    at submit time unless the request already carries a budget).
     """
     payload = np.asarray(payload)
     if not (np.issubdtype(payload.dtype, np.floating)
@@ -168,4 +183,4 @@ def make_request(payload: np.ndarray, kind: str = "Outplace_Complex",
                 if timeout_ms is not None else None)
     return FFTRequest(payload=payload.reshape(rows, *extents),
                       extents=extents, kind=kind, precision=precision,
-                      rows=rows, deadline=deadline)
+                      rows=rows, deadline=deadline, retries_left=retries)

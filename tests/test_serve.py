@@ -17,9 +17,10 @@ from repro.core.plan import Candidate, Plan, PlanCache, PlanRigor
 from repro.core.results import (aggregate_rows, percentile,
                                 percentile_summary, Row)
 from repro.core.wisdom import Wisdom
-from repro.serve import (Coalescer, FFTService, QueueFull, RequestQueue,
-                         RequestTimeout, ServeConfig, ServeError,
-                         TrafficSpec, make_request, replay)
+from repro.serve import (Coalescer, FaultPlan, FFTService, QueueFull,
+                         RequestQueue, RequestTimeout, ServeConfig,
+                         ServeError, TrafficSpec, WorkerWedged, chaos_replay,
+                         make_request, replay)
 
 
 def _payload(ext=(64,), rows=None, dtype=np.complex64, seed=0):
@@ -247,6 +248,149 @@ def test_serve_config_roundtrip_and_validation():
         ServeConfig(max_batch=0)
     with pytest.raises(ValueError):
         ServeConfig(rigor="bogus")
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance: fallback, retry, bisection, watchdog, wedge detection
+# ---------------------------------------------------------------------------
+def test_engine_falls_back_past_compile_fault_and_persists_demotion(tmp_path):
+    from repro.core.plan import fallback_chain
+    from repro.core.client import Problem
+
+    top = fallback_chain(Problem((64,), "Outplace_Complex", "float")).pop(0)
+    wisdom = Wisdom(str(tmp_path / "wisdom.json"), device_kind="cpu")
+    svc = FFTService(config=ServeConfig(max_batch=8, breaker_threshold=1),
+                     wisdom=wisdom,
+                     fault_plan=FaultPlan([{"fault": "compile_error",
+                                            "backend": top.backend}]))
+    with svc:
+        x = _payload((64,))
+        out = np.asarray(svc.submit(x).result(timeout=300))
+    assert np.allclose(out[0], np.fft.fft(x), rtol=1e-3, atol=1e-3)
+    rep = svc.report()
+    assert rep["completed"] == 1 and rep["errors"] == 0
+    assert rep["demotions"] >= 1 and rep["faults_injected"] >= 1
+    # the quarantine shows up in the report and survived to wisdom on disk
+    assert any(k.startswith(top.backend) and v["state"] == "open"
+               for k, v in rep["quarantine"].items())
+    fresh = Wisdom(str(tmp_path / "wisdom.json"), device_kind="cpu")
+    assert top.backend in fresh.demoted(
+        Problem((64,), "Outplace_Complex", "float"))
+
+
+def test_poison_request_fails_alone_batchmates_succeed():
+    xs = [_payload((32,), seed=i) for i in range(4)]
+    reqs = [make_request(x) for x in xs]
+    poison = reqs[1]
+    svc = _service(coalesce_window_ms=20.0)
+    svc.fault_plan = FaultPlan([{"fault": "execute_error",
+                                 "rid": poison.rid}])
+    with svc:
+        svc.queue.put_many(reqs)      # one coalesced batch, rids known
+        with pytest.raises(ServeError, match="injected execute error"):
+            poison.result(timeout=300)
+        for i, req in enumerate(reqs):
+            if req is poison:
+                continue
+            out = np.asarray(req.result(timeout=300))
+            ref = np.fft.fft(xs[i])
+            assert np.max(np.abs(out[0] - ref)) / np.max(np.abs(ref)) < 1e-2
+    rep = svc.report()
+    assert rep["completed"] == 3 and rep["errors"] == 1
+    assert rep["bisections"] >= 2     # 4 -> 2+2 -> 1+1: poison isolated
+
+
+def test_transient_fault_recovered_by_retry():
+    svc = _service(faults=({"fault": "execute_error", "times": 2},),
+                   max_retries=3)
+    with svc:
+        req = svc.submit(_payload((32,)))
+        out = np.asarray(req.result(timeout=300))
+    assert out is not None and req.ok and req.attempts >= 1
+    rep = svc.report()
+    assert rep["completed"] == 1 and rep["errors"] == 0
+    assert rep["retries"] >= 1 and rep["retry_successes"] >= 1
+    assert rep["faults_injected"] == 2
+
+
+def test_kill_worker_watchdog_restarts_and_service_survives():
+    svc = _service(faults=({"fault": "kill_worker", "times": 1},),
+                   watchdog_interval_s=0.05)
+    with svc:
+        doomed = svc.submit(_payload((32,)))
+        with pytest.raises(ServeError, match="failed by watchdog"):
+            doomed.result(timeout=60)
+        ok = svc.submit(_payload((32,)))     # the restarted worker serves it
+        assert ok.result(timeout=300) is not None
+    rep = svc.report()
+    assert rep["worker_restarts"] >= 1 and rep["completed"] == 1
+    assert any("WorkerKilled" in e for e in rep["worker_errors"])
+    assert rep["wedged"] == 0
+
+
+def test_stop_reports_wedged_worker():
+    svc = _service(faults=({"fault": "transfer_stall", "stall_ms": 3000.0,
+                            "times": 1},),
+                   join_timeout_s=0.2, drain_timeout_s=0.2,
+                   watchdog_interval_s=0.0)
+    svc.start()
+    req = svc.submit(_payload((32,)))
+    time.sleep(0.1)                   # let the worker enter the stall
+    with pytest.raises(WorkerWedged, match="failed to join") as ei:
+        svc.stop()
+    assert ei.value.snapshot["wedged_workers"]
+    assert ei.value.snapshot["wedged"] >= 1
+    req.result(timeout=60)            # the stalled worker still finishes it
+
+
+def test_failure_messages_carry_actionable_context():
+    q = RequestQueue(maxsize=2)
+    q.put(make_request(_payload()))
+    q.put(make_request(_payload()))
+    with pytest.raises(QueueFull, match=r"2/2 requests pending"):
+        q.put(make_request(_payload()), block=False)
+    with pytest.raises(QueueFull, match=r"after waiting 0.01s"):
+        q.put(make_request(_payload()), timeout=0.01)
+    with _service(timeout_ms=0.0) as svc:
+        req = svc.submit(_payload((32,)))
+        with pytest.raises(RequestTimeout, match=r"0 ms deadline"):
+            req.result(timeout=60)
+    assert "queue depth" in str(req.error)
+
+
+def test_serve_config_fault_fields_roundtrip_and_validation():
+    cfg = ServeConfig(max_retries=5, breaker_threshold=2,
+                      faults=({"fault": "latency_spike", "stall_ms": 1.0},))
+    assert ServeConfig.from_dict(cfg.to_dict()) == cfg
+    assert "faults" not in ServeConfig().to_dict()
+    with pytest.raises(ValueError):
+        ServeConfig(max_retries=-1)
+    with pytest.raises(ValueError):
+        ServeConfig(breaker_threshold=0)
+    with pytest.raises(ValueError, match="unknown fault"):
+        ServeConfig(faults=({"fault": "gremlins"},))
+
+
+def test_chaos_replay_grades_recovery(tmp_path):
+    from repro.core.plan import fallback_chain
+    from repro.core.client import Problem
+
+    top = fallback_chain(Problem((64,), "Outplace_Complex", "float")).pop(0)
+    spec = TrafficSpec(extents=((64,), (32,)), requests=10, seed=11,
+                       faults=({"fault": "compile_error",
+                                "backend": top.backend},
+                               {"fault": "execute_error", "after": 1,
+                                "times": 1}))
+    svc = FFTService(config=ServeConfig(coalesce_window_ms=2.0, max_batch=8,
+                                        breaker_threshold=1))
+    with svc:
+        rep = chaos_replay(svc, spec)
+    assert rep.ok, rep.violations
+    assert rep.total == 10 and rep.poisoned == 0
+    assert rep.clean_success_rate == 1.0
+    assert rep.faults["injected"] >= 2
+    assert rep.replay.service["demotions"] >= 1
+    json.dumps(rep.to_dict())
 
 
 # ---------------------------------------------------------------------------

@@ -278,6 +278,121 @@ def bench_serve_burst(n_requests: int, ext: int = 4096) -> dict:
     return rec
 
 
+def bench_chaos_fallback(requests: int) -> dict:
+    """Chaos scenario 1: the top-ranked backend for the hot shape hard-fails
+    at compile, plus one transient execute fault.  Serial FIFO (window 0,
+    max_batch 1) so the recovery path is deterministic: every request must
+    still be delivered — via the fallback chain (the compile fault) or a
+    backoff retry (the transient) — with the demotion recorded."""
+    from repro.core.client import Problem
+    from repro.core.plan import fallback_chain
+    from repro.serve import FFTService, ServeConfig, TrafficSpec, chaos_replay
+
+    hot = Problem((256,), "Outplace_Complex", "float")
+    top = fallback_chain(hot)[0].backend
+    spec = TrafficSpec(extents=("256", "64"), kinds=("Outplace_Complex",),
+                       precisions=("float",), requests=requests, rate_hz=0.0,
+                       zipf_s=1.1, seed=2017,
+                       faults=({"fault": "compile_error", "backend": top},
+                               {"fault": "execute_error", "times": 1}))
+    rec = {"mode": "chaos_fallback", "top_backend": top,
+           "traffic": spec.to_dict()}
+    try:
+        cfg = ServeConfig(coalesce_window_ms=0.0, max_batch=1,
+                          breaker_threshold=1, max_retries=2)
+        with FFTService(config=cfg) as svc:
+            rep = chaos_replay(svc, spec)
+        s = rep.replay.service
+        rec.update(ok=rep.ok and s["demotions"] >= 1
+                   and s["retry_successes"] >= 1,
+                   clean_success_rate=rep.clean_success_rate,
+                   poisoned=rep.poisoned, violations=rep.violations,
+                   demotions=s["demotions"], retries=s["retries"],
+                   retry_successes=s["retry_successes"],
+                   faults_injected=s["faults_injected"],
+                   quarantined=[k for k, v in s["quarantine"].items()
+                                if v["state"] != "closed"],
+                   wedged=s["wedged"], completed=s["completed"])
+    except Exception as e:
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}")
+    return rec
+
+
+def bench_chaos_kill(requests: int) -> dict:
+    """Chaos scenario 2: a worker thread is killed mid-dispatch.  The
+    watchdog must fail the in-flight request cleanly (its future completes
+    with an error, not a hang), restart the worker, and the service must
+    finish the rest of the tape — no wedge, at most the one orphaned
+    request lost."""
+    from repro.serve import FFTService, ServeConfig, TrafficSpec, chaos_replay
+
+    spec = TrafficSpec(extents=("256",), kinds=("Outplace_Complex",),
+                       precisions=("float",), requests=requests, rate_hz=0.0,
+                       seed=2017,
+                       faults=({"fault": "kill_worker", "after": 2,
+                                "times": 1},))
+    rec = {"mode": "chaos_kill", "traffic": spec.to_dict()}
+    try:
+        cfg = ServeConfig(coalesce_window_ms=0.0, max_batch=1,
+                          watchdog_interval_s=0.05)
+        with FFTService(config=cfg) as svc:
+            # orphaned in-flight requests are failed by design: the dying
+            # worker can hold its current batch plus up to `inflight`
+            # pending batches, so the gate tolerates that much loss
+            lost = 1 + cfg.inflight
+            rep = chaos_replay(svc, spec,
+                               min_clean_success=1.0 - (lost + 1) / requests)
+        s = rep.replay.service
+        rec.update(ok=rep.ok and s["worker_restarts"] >= 1
+                   and s["wedged"] == 0,
+                   clean_success_rate=rep.clean_success_rate,
+                   violations=rep.violations, completed=s["completed"],
+                   failed_in_flight=s["errors"],
+                   worker_restarts=s["worker_restarts"], wedged=s["wedged"],
+                   worker_errors=s["worker_errors"],
+                   faults_injected=s["faults_injected"])
+    except Exception as e:
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}")
+    return rec
+
+
+def _run_chaos(args) -> int:
+    """The --serve --chaos grid: seeded fault-injection replays validating
+    the recovery machinery end to end (CI's chaos-smoke gate)."""
+    import jax
+
+    requests = 16 if args.smoke else 48
+    dev = jax.devices()[0]
+    doc = {
+        "meta": {
+            "device_kind": dev.device_kind,
+            "platform": dev.platform,
+            "devices": jax.device_count(),
+            "interpret_kernels": dev.platform != "tpu",
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "note": "chaos replay: seeded FaultPlan against the Zipf tape; "
+                    "clean_success_rate counts non-poisoned requests only",
+        },
+        "results": [],
+    }
+    ok = True
+    for rec in (bench_chaos_fallback(requests),
+                bench_chaos_kill(max(8, requests // 2))):
+        doc["results"].append(rec)
+        ok = ok and rec["ok"]
+        status = ("clean_success={:.3f} violations={}".format(
+                      rec["clean_success_rate"], rec["violations"])
+                  if "clean_success_rate" in rec
+                  else f"failed: {rec.get('error')}")
+        print(f"{rec['mode']:16s} ok={rec['ok']} {status}")
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"wrote {len(doc['results'])} records to {args.out}")
+    return 0 if ok else 1
+
+
 def _run_serve(args) -> int:
     """The --serve grid: per-backend Zipf replays + the burst speedup."""
     import jax
@@ -382,9 +497,16 @@ def main(argv=None) -> int:
                         "transforms: per-backend Zipf mixed-shape replays "
                         "(tail latency, GiB/s, coalesce rate) + the "
                         "coalesced-vs-serial burst speedup")
+    p.add_argument("--chaos", action="store_true",
+                   help="with --serve: run the seeded fault-injection "
+                        "replays (fallback-chain recovery, watchdog worker "
+                        "restart) instead of the perf grid; exits nonzero "
+                        "if any recovery invariant is violated")
     p.add_argument("--_worker", action="store_true", help=argparse.SUPPRESS)
     args = p.parse_args(argv)
 
+    if args.serve and args.chaos:
+        return _run_chaos(args)
     if args.serve:
         return _run_serve(args)
     if args.devices:
