@@ -42,6 +42,5 @@ SPECS = {
 def run(reps: int = 3) -> None:
     for tag, spec in SPECS.items():
         results = run_suite(replace(spec, repetitions=reps))
-        for (lib, ext, prec, kind, rg, op, mean, sd, n) in \
-                results.aggregate(op="execute_forward"):
-            emit(f"backend/{tag}/{lib}/{ext}", mean * 1e3)
+        for a in results.aggregate_named(op="execute_forward"):
+            emit(f"backend/{tag}/{a.library}/{a.extents}", a.mean * 1e3)

@@ -27,6 +27,5 @@ SPECS = (
 def run(reps: int = 3) -> None:
     for spec in SPECS:
         results = run_suite(replace(spec, repetitions=reps))
-        for (lib, ext, prec, kind, rg, op, mean, sd, n) in \
-                results.aggregate(op="execute_forward"):
-            emit(f"dtype/{kind}/{prec}/{ext}", mean * 1e3)
+        for a in results.aggregate_named(op="execute_forward"):
+            emit(f"dtype/{a.kind}/{a.precision}/{a.extents}", a.mean * 1e3)

@@ -235,6 +235,6 @@ NAMES = {
 def run(reps: int = 3) -> None:
     for spec in SPECS:
         results = run_suite(replace(spec, repetitions=reps))
-        for (lib, ext, prec, kind, rg, op, mean, sd, n) in \
-                results.aggregate(op="execute_forward"):
-            emit(NAMES.get(lib, f"kernel/{lib}/{ext}"), mean * 1e3)
+        for a in results.aggregate_named(op="execute_forward"):
+            emit(NAMES.get(a.library, f"kernel/{a.library}/{a.extents}"),
+                 a.mean * 1e3)

@@ -190,8 +190,9 @@ SPEC = SuiteSpec(clients=tuple(CLIENTS[(a, m)].title
 
 def run(reps: int = 3) -> None:
     results = run_suite(replace(SPEC, repetitions=reps))
-    for (lib, ext, prec, kind, rigor, op, mean, sd, n) in \
-            results.aggregate(op="execute_forward"):
+    for a in results.aggregate_named(op="execute_forward"):
+        lib = a.library
         mode, arch = ("train", lib[len("LMTrain-"):]) \
             if lib.startswith("LMTrain-") else ("decode", lib[len("LMDecode-"):])
-        emit(f"lm/{mode}_step/{arch}", mean * 1e3, f"reduced b{BATCH}s{SEQ_LEN}")
+        emit(f"lm/{mode}_step/{arch}", a.mean * 1e3,
+             f"reduced b{BATCH}s{SEQ_LEN}")

@@ -36,9 +36,7 @@ def run(reps: int = 3) -> None:
                            wisdom=wpath if rigor is PlanRigor.WISDOM_ONLY
                            else None)
             results = run_suite(spec)
-            for (lib, ext, prec, kind, rg, op, mean, sd, n) in \
-                    results.aggregate(op="init_forward"):
-                emit(f"plan_time/{rigor.value}/{ext}", mean * 1e3)
-            for (lib, ext, prec, kind, rg, op, mean, sd, n) in \
-                    results.aggregate(op="execute_forward"):
-                emit(f"fft_time/{rigor.value}/{ext}", mean * 1e3)
+            for a in results.aggregate_named(op="init_forward"):
+                emit(f"plan_time/{rigor.value}/{a.extents}", a.mean * 1e3)
+            for a in results.aggregate_named(op="execute_forward"):
+                emit(f"fft_time/{rigor.value}/{a.extents}", a.mean * 1e3)

@@ -19,7 +19,6 @@ SPEC = SuiteSpec(clients=("XlaFFT", "Planned", "ChirpZPallas"),
 
 def run(reps: int = 3) -> None:
     results = run_suite(replace(SPEC, repetitions=reps))
-    for (lib, ext, prec, kind, rg, op, mean, sd, n) in \
-            results.aggregate(op="execute_forward"):
-        cls = classify(tuple(int(v) for v in ext.split("x")))
-        emit(f"radix/{cls}/{lib}/{ext}", mean * 1e3)
+    for a in results.aggregate_named(op="execute_forward"):
+        cls = classify(tuple(int(v) for v in a.extents.split("x")))
+        emit(f"radix/{cls}/{a.library}/{a.extents}", a.mean * 1e3)

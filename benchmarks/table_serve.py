@@ -85,7 +85,6 @@ def run(requests: int = 96, burst: int = 128) -> None:
                       kinds=("Outplace_Complex",), precisions=("float",),
                       warmups=1, repetitions=3, output=None)
     rs = Session(context=Context({"serve_burst": 8})).run(suite)
-    for (lib, ext, prec, kind, rigor, op, mean, sd, p50, p95, p99, n) in \
-            rs.aggregate(op="execute_forward", percentiles=True):
-        emit(f"serve_suite/{lib}/{ext}", mean * 1e3,
-             f"p50={p50*1e3:.0f}us p99={p99*1e3:.0f}us n={n}")
+    for a in rs.aggregate_named(op="execute_forward", percentiles=True):
+        emit(f"serve_suite/{a.library}/{a.extents}", a.mean * 1e3,
+             f"p50={a.p50*1e3:.0f}us p99={a.p99*1e3:.0f}us n={a.n}")

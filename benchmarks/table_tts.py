@@ -18,9 +18,9 @@ def run(max_exp: int = 5, reps: int = 3) -> None:
                    sweeps=(SweepSpec("powerof2", rank=3,
                                      min_exp=3, max_exp=max_exp),))
     results = run_suite(spec)
-    for (lib, ext, prec, kind, rigor, op, mean, sd, n) in \
-            results.aggregate(op="total"):
-        emit(f"tts/{lib}/{ext}", mean * 1e3, f"sd={sd*1e3:.1f}us n={n}")
-    for (lib, ext, prec, kind, rigor, op, mean, sd, n) in \
-            results.aggregate(op="execute_forward"):
-        emit(f"fft_only/{lib}/{ext}", mean * 1e3, f"sd={sd*1e3:.1f}us")
+    for a in results.aggregate_named(op="total"):
+        emit(f"tts/{a.library}/{a.extents}", a.mean * 1e3,
+             f"sd={a.sd*1e3:.1f}us n={a.n}")
+    for a in results.aggregate_named(op="execute_forward"):
+        emit(f"fft_only/{a.library}/{a.extents}", a.mean * 1e3,
+             f"sd={a.sd*1e3:.1f}us")

@@ -24,8 +24,10 @@ import csv
 import io
 import json
 import os
-import statistics
 from dataclasses import dataclass, field
+
+from .compare import PERCENTILES, percentile  # noqa: F401  (re-exported)
+from .compare import aggregate_result_rows as _aggregate_named
 
 COLUMNS = [
     "library", "device", "extents", "rank", "extent_class", "precision",
@@ -171,25 +173,9 @@ def save_csv(path: str, rows, columns) -> str:
     return path
 
 
-#: The tail-latency quantiles every reporter shares (serve metrics, the
-#: aggregate tables, and ``ResultSet.summary()``).
-PERCENTILES = (50, 95, 99)
-
-
-def percentile(vals, q: float) -> float:
-    """q-th percentile (0..100) with linear interpolation between closest
-    ranks — matches ``numpy.percentile``'s default method without needing
-    an array copy of the input."""
-    if not vals:
-        raise ValueError("percentile of empty sequence")
-    s = sorted(vals)
-    if len(s) == 1:
-        return float(s[0])
-    pos = (len(s) - 1) * (q / 100.0)
-    lo = int(pos)
-    hi = min(lo + 1, len(s) - 1)
-    frac = pos - lo
-    return float(s[lo] + (s[hi] - s[lo]) * frac)
+# The tail-latency quantiles (PERCENTILES) and the percentile helper are
+# re-exported from the shared comparison core (repro.core.compare), which
+# owns the one grouping/stat implementation every surface consumes.
 
 
 def percentile_summary(vals, quantiles=PERCENTILES) -> dict:
@@ -207,24 +193,13 @@ def aggregate_rows(rows, op: str | None = None, percentiles: bool = False):
     (``(*key, mean, sd, n)``) is unchanged so existing consumers keep
     unpacking 9-tuples.
 
-    Shared by :class:`ResultWriter` and :class:`repro.core.suite.ResultSet`.
+    Thin tuple adapter over the shared comparison core
+    (:func:`repro.core.compare.aggregate_result_rows`), which
+    :class:`ResultWriter`, :class:`repro.core.suite.ResultSet`, and the
+    ``benchmarks/table_*`` reporters all consume.
     """
-    groups: dict[tuple, list[float]] = {}
-    for r in rows:
-        if not r.success or (op is not None and r.op != op):
-            continue
-        key = (r.library, r.extents, r.precision, r.kind, r.rigor, r.op)
-        groups.setdefault(key, []).append(r.time_ms)
-    out = []
-    for key, vals in sorted(groups.items()):
-        mean = statistics.fmean(vals)
-        sd = statistics.stdev(vals) if len(vals) > 1 else 0.0
-        if percentiles:
-            ps = tuple(percentile(vals, q) for q in PERCENTILES)
-            out.append((*key, mean, sd, *ps, len(vals)))
-        else:
-            out.append((*key, mean, sd, len(vals)))
-    return out
+    return [a.as_tuple()
+            for a in _aggregate_named(rows, op, percentiles=percentiles)]
 
 
 def open_sink(path: str, fmt: str | None = None,

@@ -358,6 +358,17 @@ class ResultSet:
         :func:`repro.core.results.aggregate_rows`)."""
         return aggregate_rows(self.rows, op, percentiles=percentiles)
 
+    def aggregate_named(self, op: Optional[str] = None,
+                        percentiles: bool = False):
+        """Same grouping as :meth:`aggregate` but through the shared
+        comparison core directly: a list of
+        :class:`repro.core.compare.AggRow` with *named* fields
+        (``a.library``, ``a.mean``, ``a.p99``, ...) — what the
+        ``benchmarks/table_*`` reporters consume instead of unpacking
+        positional tuples."""
+        from .compare import aggregate_result_rows
+        return aggregate_result_rows(self.rows, op, percentiles=percentiles)
+
     def summary(self, latency_op: str = "execute_forward") -> dict:
         """Planner-cost overview (paper Figs. 4-5) without grepping CSV rows:
         row/failure counts, aggregate planning time (the init ops carry

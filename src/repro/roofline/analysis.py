@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import glob
 import json
+import math
 import os
 from dataclasses import dataclass
 
@@ -29,6 +30,65 @@ PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 ICI_BW = 50e9
 CHIPS = {"16x16": 256, "2x16x16": 512}
+
+#: Per-device (peak FLOP/s, HBM bytes/s) envelopes for the FFT roofline,
+#: keyed by a lowercase prefix of ``jax.Device.device_kind``.  The ``cpu``
+#: entry is a deliberately conservative host envelope (one core's FMA
+#: throughput / dual-channel DRAM) so interpret-mode CI containers still
+#: produce *finite, comparable* fractions; absolute cpu fractions are not
+#: meaningful across hosts, their trajectory on one host is.
+DEVICE_PEAKS = {
+    "cpu": (5.0e10, 2.0e10),
+    "tpu v5 lite": (PEAK_FLOPS, HBM_BW),
+    "tpu v5e": (PEAK_FLOPS, HBM_BW),
+    "tpu v4": (275e12, 1228e9),
+    "tpu v6": (918e12, 1640e9),
+}
+
+
+def device_peaks(device_kind: str | None) -> tuple[float, float]:
+    """(peak FLOP/s, HBM bytes/s) for a jax ``device_kind`` string, by
+    longest lowercase-prefix match; unknown kinds fall back to the cpu
+    envelope (finite fractions beat a KeyError in a report path)."""
+    dk = (device_kind or "").lower()
+    best = None
+    for prefix, peaks in DEVICE_PEAKS.items():
+        if dk.startswith(prefix) and (best is None or len(prefix) > best[0]):
+            best = (len(prefix), peaks)
+    return best[1] if best else DEVICE_PEAKS["cpu"]
+
+
+def fft_model_flops(extents, batch: int = 1) -> float:
+    """Modeled FFT flops: the standard 5·N·log2(N) op count over the full
+    nd problem (log2 factors over the axes sum, so the total-N form covers
+    any rank) times the batch."""
+    n = 1
+    for e in extents:
+        n *= int(e)
+    if n <= 1:
+        return 0.0
+    return 5.0 * batch * n * math.log2(n)
+
+
+def fft_roofline_frac(time_ms: float, flops: float, bytes_moved: float,
+                      device_kind: str | None) -> float:
+    """Achieved fraction of the modeled roofline for one measured FFT.
+
+    ``ideal = max(flops/peak_flops, bytes/hbm_bw)`` — whichever wall the
+    problem hits first — over the measured time.  Always finite for a
+    positive measurement: a non-finite or non-positive bytes model (an
+    infeasible-candidate sentinel leaking through) contributes zero to the
+    ideal rather than poisoning the column.
+    """
+    if not time_ms or time_ms <= 0.0:
+        return 0.0
+    peak_flops, hbm_bw = device_peaks(device_kind)
+    terms = [0.0]
+    if flops and flops > 0 and flops != float("inf"):
+        terms.append(flops / peak_flops)
+    if bytes_moved and bytes_moved > 0 and bytes_moved != float("inf"):
+        terms.append(bytes_moved / hbm_bw)
+    return max(terms) / (time_ms * 1e-3)
 
 
 def active_params(cfg) -> tuple[float, float]:
@@ -67,9 +127,21 @@ def active_params(cfg) -> tuple[float, float]:
         active = nd_ * (attn_p() + mlp_p(cfg.d_ff_dense)) + \
             nm * (attn_p() + cfg.top_k * ex + shared)
     elif kind == "vlm":
-        per = attn_p() + mlp_p(cfg.d_ff)
-        n_cross = cfg.n_layers // cfg.cross_every
-        total = active = cfg.n_layers * per  # cross ~ self in param count
+        def cross_attn_p():
+            # mirrors models.attention.init_cross_attention with
+            # d_kv_in == d_model: q/out over d, k/v from the image embeds
+            return (d * cfg.n_heads * cfg.head_dim
+                    + 2 * d * cfg.n_kv_heads * cfg.head_dim
+                    + cfg.n_heads * cfg.head_dim * d)
+        # every cross_every-th decoder layer is cross-attention (the model
+        # builds n_layers//cross_every units of (cross_every-1) self + 1
+        # cross); count both layer kinds explicitly instead of assuming
+        # cross ~ self
+        n_cross = cfg.n_layers // cfg.cross_every if cfg.cross_every else 0
+        n_self = cfg.n_layers - n_cross
+        per_self = attn_p() + mlp_p(cfg.d_ff)
+        per_cross = cross_attn_p() + mlp_p(cfg.d_ff)
+        total = active = n_self * per_self + n_cross * per_cross
     elif kind == "xlstm":
         di = 2 * d
         per_m = 2 * d * di + 3 * di * di + di * d + 2 * di
@@ -123,7 +195,12 @@ def row_from_record(rec: dict) -> RooflineRow:
                       str(rec["status"]))
     if rec["status"] != "ok":
         return row
-    chips = CHIPS[rec["mesh"]]
+    chips = CHIPS.get(rec["mesh"])
+    if chips is None:
+        # an unfamiliar dry-run mesh must not abort the whole table — emit
+        # a skipped row so the rest of the grid still renders
+        row.status = f"skipped: unknown mesh {rec['mesh']}"
+        return row
     row.compute_s = rec["flops_per_device"] / PEAK_FLOPS
     row.memory_s = rec["dot_bytes_per_device"] / HBM_BW
     row.collective_s = rec["collectives"]["total_bytes"] / ICI_BW
@@ -144,7 +221,8 @@ def row_from_record(rec: dict) -> RooflineRow:
 def load_rows(dryrun_dir: str, mesh: str | None = "16x16") -> list[RooflineRow]:
     rows = []
     for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
-        rec = json.load(open(path))
+        with open(path) as f:
+            rec = json.load(f)
         if mesh is not None and rec.get("mesh") != mesh:
             continue
         rows.append(row_from_record(rec))

@@ -1,0 +1,374 @@
+"""Shared comparison core (repro.core.compare) + the bench_diff gate.
+
+Covers the three layers the perf-trajectory loop depends on: document
+schema round-trip and legacy (schema-1) normalization, cross-run row
+alignment, and the noise-aware verdicts — plus the golden markdown report
+over the two checked-in fixtures and the bench_diff CLI exit codes.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import json
+import math
+import os
+
+import pytest
+
+from repro.core import compare, results
+from repro.core.compare import (
+    SMOKE_THRESHOLDS, AggStats, BenchDoc, BenchFormatError, Thresholds,
+    aggregate_result_rows, align_rows, compare_pair, diff_docs, fig7_report,
+    load_bench, make_meta, markdown_report, normalize_row, pooled_stderr,
+    row_key,
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "fixtures")
+
+
+def _load_bench_diff():
+    spec = importlib.util.spec_from_file_location(
+        "bench_diff", os.path.join(ROOT, "tools", "bench_diff.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+bench_diff = _load_bench_diff()
+
+
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def _grid_row(**over):
+    row = {"backend": "xla", "extent": "1024", "rank": 1,
+           "class": "powerof2", "kind": "Outplace_Complex",
+           "precision": "float", "time_ms": 1.0, "ok": True}
+    row.update(over)
+    return row
+
+
+# ---------------------------------------------------------------------------
+# documents: schema round-trip + legacy normalization
+# ---------------------------------------------------------------------------
+def test_make_meta_round_trip(tmp_path):
+    meta = make_meta(device_kind="cpu", platform="cpu", jax="0.0", reps=2)
+    assert meta["schema"] == compare.SCHEMA_VERSION
+    # in this repo there is always a HEAD to stamp
+    assert meta["git_sha"] and len(meta["git_sha"]) == 40
+    path = _write(tmp_path, "BENCH_x.json",
+                  {"meta": meta, "results": [_grid_row()]})
+    doc = load_bench(path)
+    assert doc.schema == compare.SCHEMA_VERSION
+    assert doc.git_sha == meta["git_sha"]
+    assert doc.meta["reps"] == 2
+    assert doc.label == "BENCH_x.json"
+    assert len(doc.ok_rows()) == 1
+
+
+def test_load_legacy_committed_bench():
+    """The committed schema-1 trajectory docs load and normalize."""
+    doc = load_bench(os.path.join(ROOT, "BENCH_PR5.json"))
+    assert doc.schema == 1
+    assert doc.rows
+    for r in doc.rows:
+        assert r["mode"] == "grid"
+        assert r["kind"] == "Outplace_Complex"
+        assert r["precision"] == "float"
+        assert r["devices"] == 1
+        assert r["rank"] == len(str(r["extent"]).split("x"))
+
+
+def test_normalize_serve_row():
+    row = normalize_row({"mode": "serve_replay", "p50_ms": 1.0, "ok": True})
+    assert row["backend"] == "serve_replay"
+    assert row["extent"] == ""
+    assert row["rank"] == 0
+    assert row["devices"] == 1
+
+
+@pytest.mark.parametrize("doc, msg", [
+    ("[]", "top level"),
+    ('{"results": []}', "meta"),
+    ('{"meta": {"device_kind": "cpu", "platform": "cpu"}}', "results"),
+    ('{"meta": {"platform": "cpu"}, "results": []}', "device_kind"),
+    ('{"meta": {"device_kind": "cpu", "platform": "cpu", "schema": 99}, '
+     '"results": []}', "newer than supported"),
+    ('{"meta": {"device_kind": "cpu", "platform": "cpu"}, '
+     '"results": [{"extent": "8"}]}', "no backend"),
+    ("not json", "not valid JSON"),
+])
+def test_load_bench_rejects_malformed(tmp_path, doc, msg):
+    p = tmp_path / "bad.json"
+    p.write_text(doc)
+    with pytest.raises(BenchFormatError, match=msg):
+        load_bench(str(p))
+
+
+# ---------------------------------------------------------------------------
+# alignment
+# ---------------------------------------------------------------------------
+def test_align_rows_pairs_and_orphans():
+    a = [normalize_row(_grid_row()),
+         normalize_row(_grid_row(extent="4096"))]
+    b = [normalize_row(_grid_row(time_ms=2.0)),
+         normalize_row(_grid_row(backend="stockham"))]
+    pairs = {k: (ra, rb) for k, ra, rb in align_rows(a, b)}
+    assert len(pairs) == 3
+    ra, rb = pairs[row_key(a[0])]
+    assert ra["time_ms"] == 1.0 and rb["time_ms"] == 2.0
+    assert pairs[row_key(a[1])][1] is None          # removed
+    assert pairs[row_key(b[1])][0] is None          # added
+
+
+def test_align_rows_duplicate_first_wins():
+    a = [normalize_row(_grid_row(time_ms=1.0)),
+         normalize_row(_grid_row(time_ms=9.0))]
+    aligned = align_rows(a, [normalize_row(_grid_row(time_ms=2.0))])
+    assert len(aligned) == 1
+    assert aligned[0][1]["time_ms"] == 1.0
+
+
+def test_serve_rows_never_collide_with_grid():
+    grid = normalize_row(_grid_row())
+    serve = normalize_row({"mode": "serve_replay", "p50_ms": 1.0})
+    assert row_key(grid) != row_key(serve)
+
+
+# ---------------------------------------------------------------------------
+# noise-aware verdicts
+# ---------------------------------------------------------------------------
+def _pair(va, vb, th=Thresholds(), a_over=None, b_over=None):
+    ra = normalize_row(_grid_row(time_ms=va, **(a_over or {})))
+    rb = normalize_row(_grid_row(time_ms=vb, **(b_over or {})))
+    return compare_pair(row_key(ra), ra, rb, th)
+
+
+def test_feasibility_loss_gates_unconditionally():
+    # even the loosest thresholds never excuse a lost grid point
+    r = _pair(1.0, None, th=SMOKE_THRESHOLDS,
+              b_over={"ok": False, "error": "boom"})
+    assert r.verdict == "regression"
+    assert "boom" in r.detail
+
+
+def test_now_feasible_is_improvement():
+    r = _pair(None, 1.0, a_over={"ok": False})
+    assert r.verdict == "improvement"
+    r = _pair(None, None, a_over={"ok": False}, b_over={"ok": False})
+    assert r.verdict == "unchanged"
+
+
+def test_one_rep_rows_gate_on_floors_only():
+    th = Thresholds(sigma=3.0, min_rel=0.10, min_abs_ms=0.05)
+    # n=1, no sd: pooled stderr is 0, the floors are the only gate
+    assert _pair(1.0, 1.05, th).verdict == "unchanged"     # under min_rel
+    assert _pair(1.0, 1.2, th).verdict == "regression"
+    assert _pair(1.0, 0.8, th).verdict == "improvement"
+    # micro-row: 50% slower but under the absolute floor
+    assert _pair(0.01, 0.015, th).verdict == "unchanged"
+
+
+def test_sigma_gate_uses_pooled_stderr():
+    spread = {"sd_ms": 1.0, "n": 4}
+    # +0.9 ms on 2.0 clears both floors but not 3 x sqrt(2*1/4) ~ 2.12
+    r = _pair(2.0, 2.9, a_over=spread, b_over=spread)
+    assert r.verdict == "unchanged"
+    r = _pair(2.0, 6.0, a_over=spread, b_over=spread)
+    assert r.verdict == "regression"
+    assert r.stderr == pytest.approx(math.sqrt(0.5))
+
+
+def test_pooled_stderr_defaults_to_zero():
+    assert pooled_stderr(_grid_row(), _grid_row()) == 0.0
+    assert pooled_stderr({"sd_ms": 2.0, "n": 4},
+                         {"sd_ms": 0.0, "n": 1}) == pytest.approx(1.0)
+
+
+def test_smoke_preset_ignores_small_slowdowns():
+    assert _pair(1.0, 3.0, th=SMOKE_THRESHOLDS).verdict == "unchanged"
+    assert _pair(1.0, 6.0, th=SMOKE_THRESHOLDS).verdict == "regression"
+
+
+def test_zero_baseline_never_nan():
+    r = _pair(0.0, 0.0)
+    assert r.delta_rel == 0.0
+    r = _pair(0.0, 5.0)
+    assert r.delta_rel == math.inf and r.verdict == "regression"
+
+
+def test_higher_is_better_metrics():
+    ra = normalize_row({"mode": "serve_burst", "speedup": 4.0, "ok": True})
+    rb = normalize_row({"mode": "serve_burst", "speedup": 1.5, "ok": True})
+    r = compare_pair(row_key(ra), ra, rb, Thresholds())
+    assert r.verdict == "regression"
+    r = compare_pair(row_key(ra), rb, ra, Thresholds())
+    assert r.verdict == "improvement"
+
+
+def test_missing_metric_is_unchanged():
+    ra = normalize_row(_grid_row())
+    del ra["time_ms"]
+    r = compare_pair(row_key(ra), ra, normalize_row(_grid_row()),
+                     Thresholds())
+    assert r.verdict == "unchanged" and "missing" in r.detail
+
+
+# ---------------------------------------------------------------------------
+# diff_docs + reports
+# ---------------------------------------------------------------------------
+def _doc(rows, label="x.json", **meta_over):
+    meta = {"schema": 2, "device_kind": "cpu", "platform": "cpu"}
+    meta.update(meta_over)
+    return BenchDoc(path=label, meta=meta,
+                    rows=[normalize_row(r) for r in rows])
+
+
+def test_diff_docs_warns_on_device_mismatch_and_dups():
+    a = _doc([_grid_row(), _grid_row()], label="a.json")
+    b = _doc([_grid_row()], label="b.json", device_kind="tpu v5e")
+    res = diff_docs(a, b)
+    assert any("duplicate row key" in w for w in res.warnings)
+    assert any("device kinds differ" in w for w in res.warnings)
+    report = markdown_report(res)
+    assert "**warning:**" in report
+
+
+def test_golden_markdown_report():
+    """The checked-in fixtures produce exactly the checked-in report."""
+    res = diff_docs(load_bench(os.path.join(FIXTURES, "BENCH_a.json")),
+                    load_bench(os.path.join(FIXTURES, "BENCH_b.json")),
+                    Thresholds())
+    with open(os.path.join(FIXTURES, "bench_diff_golden.md")) as f:
+        golden = f.read()
+    assert markdown_report(res) == golden
+    assert res.has_regression
+    assert res.count("improvement") == 1
+    assert res.count("added") == 1
+    assert res.count("removed") == 1
+
+
+def test_fig7_report_cells():
+    rows = [
+        _grid_row(roofline_frac=0.25),
+        _grid_row(extent="960", **{"class": "radix357"},
+                  roofline_frac=0.5),
+        _grid_row(backend="fourstep", ok=False, error="nope"),
+        _grid_row(backend="stockham"),                 # ok, no roofline data
+    ]
+    doc = _doc(rows)
+    report = fig7_report(doc)
+    lines = report.splitlines()
+    header = next(ln for ln in lines if ln.startswith("| backend"))
+    # powerof2 column sorts before radix357
+    assert header.index("powerof2/1d") < header.index("radix357/1d")
+    xla = next(ln for ln in lines if ln.startswith("| xla"))
+    assert "25.0%" in xla and "50.0%" in xla
+    four = next(ln for ln in lines if ln.startswith("| fourstep"))
+    assert "·" in four
+    stock = next(ln for ln in lines if ln.startswith("| stockham"))
+    assert "?" in stock
+    assert "3/4 grid points feasible" in report
+
+
+# ---------------------------------------------------------------------------
+# bench_diff CLI
+# ---------------------------------------------------------------------------
+def test_bench_diff_exit_codes(tmp_path, capsys):
+    a = os.path.join(FIXTURES, "BENCH_a.json")
+    b = os.path.join(FIXTURES, "BENCH_b.json")
+    md = str(tmp_path / "out.md")
+    assert bench_diff.main([a, b, "--md", md]) == 1    # injected regression
+    capsys.readouterr()
+    with open(md) as f:
+        assert "VERDICT: FAIL" in f.read()
+    assert bench_diff.main([a, b, "--no-fail"]) == 0
+    assert bench_diff.main([a, a]) == 0                # self-diff passes
+    out = capsys.readouterr().out
+    assert "VERDICT: PASS" in out
+    assert bench_diff.main([a, str(tmp_path / "missing.json")]) == 2
+
+
+def test_bench_diff_fail_on_missing(tmp_path, capsys):
+    a = os.path.join(FIXTURES, "BENCH_a.json")
+    with open(a) as f:
+        doc = json.load(f)
+    doc["results"] = doc["results"][:-2]       # drop bluestein + fourstep
+    trimmed = _write(tmp_path, "trimmed.json", doc)
+    # identical timings, two rows gone: clean pass unless missing rows gate
+    assert bench_diff.main([a, trimmed]) == 0
+    assert bench_diff.main([a, trimmed, "--fail-on-missing"]) == 1
+    capsys.readouterr()
+
+
+def test_bench_diff_threshold_overrides(capsys):
+    a = os.path.join(FIXTURES, "BENCH_a.json")
+    b = os.path.join(FIXTURES, "BENCH_b.json")
+    # a 400% slowdown passes once the min-effect floor is above it
+    assert bench_diff.main([a, b, "--min-rel", "5.0"]) == 0
+    out = capsys.readouterr().out
+    assert "`custom`" in out
+
+
+def test_legacy_cross_schema_diff():
+    """Schema-1 vs schema-2 docs align (the PR5-vs-PR7 acceptance path)."""
+    doc5 = load_bench(os.path.join(ROOT, "BENCH_PR5.json"))
+    doc7 = load_bench(os.path.join(ROOT, "BENCH_PR7.json"))
+    res = diff_docs(doc5, doc7, SMOKE_THRESHOLDS)
+    assert res.rows
+    report = markdown_report(res)
+    assert "VERDICT:" in report
+
+
+# ---------------------------------------------------------------------------
+# suite-result aggregation through the shared core
+# ---------------------------------------------------------------------------
+def _rows():
+    out = []
+    for lib, t in (("a", [1.0, 2.0, 3.0]), ("b", [5.0])):
+        for i, ms in enumerate(t):
+            out.append(results.Row(
+                library=lib, device="cpu", extents="8", rank=1,
+                extent_class="powerof2", precision="float",
+                kind="Outplace_Real", rigor="estimate", run=i,
+                op="execute_forward", time_ms=ms))
+    out.append(results.Row(
+        library="a", device="cpu", extents="8", rank=1,
+        extent_class="powerof2", precision="float", kind="Outplace_Real",
+        rigor="estimate", run=9, op="execute_forward", time_ms=99.0,
+        success=False, error="x"))
+    return out
+
+
+def test_aggregate_named_matches_legacy_tuples():
+    rows = _rows()
+    named = aggregate_result_rows(rows, op="execute_forward")
+    legacy = results.aggregate_rows(rows, op="execute_forward")
+    assert [a.as_tuple() for a in named] == legacy
+    a = next(r for r in named if r.library == "a")
+    assert a.mean == pytest.approx(2.0)
+    assert a.n == 3                                 # failed row excluded
+    assert a.stats.best == 1.0
+
+
+def test_aggregate_percentile_layout():
+    rows = _rows()
+    named = aggregate_result_rows(rows, op="execute_forward",
+                                  percentiles=True)
+    a = next(r for r in named if r.library == "a")
+    assert a.p50 == pytest.approx(2.0)
+    assert a.as_tuple() == (*a.as_tuple()[:6], a.mean, a.sd,
+                            a.p50, a.p95, a.p99, a.n)
+    legacy = results.aggregate_rows(rows, op="execute_forward",
+                                    percentiles=True)
+    assert [r.as_tuple() for r in named] == legacy
+
+
+def test_aggstats_single_sample():
+    s = AggStats.of([4.0])
+    assert s.mean == 4.0 and s.sd == 0.0 and s.n == 1 and s.best == 4.0

@@ -31,6 +31,16 @@ class, merged into one document whose records carry a ``devices`` field:
     PYTHONPATH=src python tools/bench_compare.py --devices 1 2 4 8 \\
         --out BENCH_PR6.json
 
+Documents carry the schema-2 provenance header (``repro.core.compare``:
+schema version, git sha, device kind, jax version, reps) and every grid
+row records ``mean_ms``/``sd_ms``/``n`` alongside the min — the spread
+columns ``tools/bench_diff.py``'s pooled-noise regression gate consumes —
+plus the bytes-based FFT roofline: ``model_flops`` (5·N·log2 N),
+``model_bytes`` (the planner's ``estimate_bytes_moved``), and
+``roofline_frac``, the achieved fraction of whichever device wall binds.
+``--report fig7.md`` renders the gearshifft-style Fig. 7 table (backend ×
+extent class × achieved fraction) from the written document.
+
 With ``--serve`` the tool benches the FFT serving layer instead: a seeded
 Zipf mixed-shape replay per backend (p50/p95/p99 enqueue→complete latency,
 sustained GiB/s, coalesce + plan-cache counters) plus the coalesced-vs-
@@ -46,12 +56,17 @@ import argparse
 import json
 import os
 import platform
+import statistics
 import subprocess
 import sys
 import tempfile
 import time
 
 import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.compare import fig7_report, load_bench, make_meta  # noqa: E402
 
 DEFAULT_EXTENTS = ("1024", "4096", "16384", "65536",        # 1D powerof2
                    "3072", "18432",                         # 1D radix357
@@ -73,6 +88,39 @@ SMOKE_SCALING_EXTENTS = ("1024", "8x8x8", "12x12x12", "304")
 DIST_BACKENDS = ("dist1d", "slab", "pencil")
 
 
+def _record_times(rec: dict, times: list[float]) -> float:
+    """min/mean/sd/n columns from per-rep wall times (seconds); returns the
+    best time.  The sd/n columns are what bench_diff's pooled-noise gate
+    reads — a 1-rep smoke run records sd=0, n=1 (no spread information)."""
+    best = min(times)
+    rec["time_ms"] = best * 1e3
+    rec["mean_ms"] = statistics.fmean(times) * 1e3
+    rec["sd_ms"] = statistics.stdev(times) * 1e3 if len(times) > 1 else 0.0
+    rec["n"] = len(times)
+    return best
+
+
+def _annotate_roofline(rec: dict, problem, cand, best_s: float) -> None:
+    """Attach the bytes-based FFT roofline: modeled 5·N·log2(N) flops,
+    modeled HBM bytes from the planner's ``estimate_bytes_moved``, and the
+    achieved fraction of whichever wall binds (always finite for an ok
+    row — an inf bytes model degrades to the algorithmic-minimum bytes)."""
+    import jax
+    from repro.core.plan import estimate_bytes_moved
+    from repro.roofline.analysis import fft_model_flops, fft_roofline_frac
+
+    flops = fft_model_flops(problem.extents, problem.batch)
+    bytes_ = estimate_bytes_moved(problem, cand)
+    if not (0.0 < bytes_ < float("inf")):
+        # model sentinel (shouldn't happen for a row that actually ran):
+        # fall back to the one-read+one-write algorithmic minimum
+        bytes_ = 2.0 * problem.signal_bytes
+    rec["model_flops"] = flops
+    rec["model_bytes"] = bytes_
+    rec["roofline_frac"] = fft_roofline_frac(
+        best_s * 1e3, flops, bytes_, jax.devices()[0].device_kind)
+
+
 def bench_backend(backend: str, extents: tuple[int, ...], batch: int,
                   reps: int, warmups: int) -> dict:
     import jax
@@ -84,12 +132,14 @@ def bench_backend(backend: str, extents: tuple[int, ...], batch: int,
     problem = Problem(extents, "Outplace_Complex", "float", batch=batch)
     rec = {"backend": backend, "extent": "x".join(map(str, extents)),
            "rank": len(extents), "batch": batch,
+           "kind": problem.kind, "precision": problem.precision,
            "class": classify(extents)}
     if not backend_supports(backend, problem):
         rec.update(ok=False, error="unsupported extents/rank")
         return rec
     try:
-        fn = build_forward(problem, Candidate(backend))
+        cand = Candidate(backend)
+        fn = build_forward(problem, cand)
         rng = np.random.default_rng(0)
         shape = (batch, *extents)
         x = (rng.standard_normal(shape) +
@@ -100,14 +150,15 @@ def bench_backend(backend: str, extents: tuple[int, ...], batch: int,
         rec["compile_ms"] = (time.perf_counter() - t0) * 1e3
         for _ in range(warmups):
             jax.block_until_ready(fn(xd))
-        best = float("inf")
+        times = []
         for _ in range(reps):
             t0 = time.perf_counter()
             jax.block_until_ready(fn(xd))
-            best = min(best, time.perf_counter() - t0)
-        rec["time_ms"] = best * 1e3
+            times.append(time.perf_counter() - t0)
+        best = _record_times(rec, times)
         moved = 2 * x.nbytes          # one read + one write of the signal
         rec["gib_per_s"] = moved / best / 2**30
+        _annotate_roofline(rec, problem, cand, best)
         rec["ok"] = True
     except Exception as e:  # infeasible extent for this backend: record it
         rec.update(ok=False, error=f"{type(e).__name__}: {e}")
@@ -132,8 +183,9 @@ def bench_dist_backend(backend: str, extents: tuple[int, ...], batch: int,
     b = 1 if backend == "dist1d" else batch    # dist1d consumes the whole axis
     problem = Problem(extents, "Outplace_Complex", "float", batch=b)
     rec = {"backend": backend, "extent": "x".join(map(str, extents)),
-           "rank": len(extents), "batch": b, "class": classify(extents),
-           "devices": p_dev}
+           "rank": len(extents), "batch": b,
+           "kind": problem.kind, "precision": problem.precision,
+           "class": classify(extents), "devices": p_dev}
     if backend == "pencil":
         shapes = _pencil_mesh_shapes(p_dev)
         if not shapes and p_dev == 1:
@@ -182,18 +234,34 @@ def bench_dist_backend(backend: str, extents: tuple[int, ...], batch: int,
         rec["compile_ms"] = (time.perf_counter() - t0) * 1e3
         for _ in range(warmups):
             jax.block_until_ready(fn(xd))
-        best = float("inf")
+        times = []
         for _ in range(reps):
             t0 = time.perf_counter()
             jax.block_until_ready(fn(xd))
-            best = min(best, time.perf_counter() - t0)
-        rec["time_ms"] = best * 1e3
+            times.append(time.perf_counter() - t0)
+        best = _record_times(rec, times)
         moved = 2 * x.nbytes          # one read + one write of the signal
         rec["gib_per_s"] = moved / best / 2**30
+        _annotate_roofline(rec, problem, cand, best)
+        _annotate_hlo_collectives(rec, fn, xd)
         rec["ok"] = True
     except Exception as e:
         rec.update(ok=False, error=f"{type(e).__name__}: {e}")
     return rec
+
+
+def _annotate_hlo_collectives(rec: dict, fn, xd) -> None:
+    """Loop-aware collective traffic from the compiled HLO (per-device
+    SPMD module) on the distributed rows — the measured-side cross-check of
+    the planner's interconnect term in ``estimate_bytes_moved``.  Best
+    effort: not every callable exposes its compiled module."""
+    try:
+        from repro.roofline.hlo_parse import analyze
+        hlo = analyze(fn.lower(xd).compile().as_text())
+        rec["hlo_collective_bytes"] = hlo["collective_total"]
+        rec["hlo_collective_counts"] = hlo["collective_counts"]
+    except Exception:
+        pass
 
 
 #: Backends the serving replay is pinned to, plus the planner default
@@ -364,16 +432,16 @@ def _run_chaos(args) -> int:
     requests = 16 if args.smoke else 48
     dev = jax.devices()[0]
     doc = {
-        "meta": {
-            "device_kind": dev.device_kind,
-            "platform": dev.platform,
-            "devices": jax.device_count(),
-            "interpret_kernels": dev.platform != "tpu",
-            "python": platform.python_version(),
-            "jax": jax.__version__,
-            "note": "chaos replay: seeded FaultPlan against the Zipf tape; "
-                    "clean_success_rate counts non-poisoned requests only",
-        },
+        "meta": make_meta(
+            device_kind=dev.device_kind,
+            platform=dev.platform,
+            devices=jax.device_count(),
+            interpret_kernels=dev.platform != "tpu",
+            python=platform.python_version(),
+            jax=jax.__version__,
+            note="chaos replay: seeded FaultPlan against the Zipf tape; "
+                 "clean_success_rate counts non-poisoned requests only",
+        ),
         "results": [],
     }
     ok = True
@@ -404,17 +472,17 @@ def _run_serve(args) -> int:
     burst = 128
     dev = jax.devices()[0]
     doc = {
-        "meta": {
-            "device_kind": dev.device_kind,
-            "platform": dev.platform,
-            "devices": jax.device_count(),
-            "interpret_kernels": dev.platform != "tpu",
-            "python": platform.python_version(),
-            "jax": jax.__version__,
-            "note": "FFT serving layer: seeded Zipf mixed-shape replay per "
-                    "backend (p50/p95/p99 enqueue-to-complete) + coalesced "
-                    "vs serial same-shape burst",
-        },
+        "meta": make_meta(
+            device_kind=dev.device_kind,
+            platform=dev.platform,
+            devices=jax.device_count(),
+            interpret_kernels=dev.platform != "tpu",
+            python=platform.python_version(),
+            jax=jax.__version__,
+            note="FFT serving layer: seeded Zipf mixed-shape replay per "
+                 "backend (p50/p95/p99 enqueue-to-complete) + coalesced "
+                 "vs serial same-shape burst",
+        ),
         "results": [],
     }
     for backend in SERVE_BACKENDS:
@@ -465,16 +533,33 @@ def _fan_out_devices(args, device_counts: list[int]) -> int:
             doc = json.load(f)
         os.unlink(out)
         if merged["meta"] is None:
-            merged["meta"] = doc["meta"]
+            merged["meta"] = dict(doc["meta"])
             merged["meta"]["device_counts"] = []
+            merged["meta"]["workers"] = []
         merged["meta"]["device_counts"].append(n)
+        # preserve every worker's full meta (device kind / platform / jax /
+        # reps per count), not just the first one's, so bench_diff can
+        # attribute provenance per device-count axis point
+        merged["meta"]["workers"].append({"devices": n, **doc["meta"]})
         merged["results"].extend(doc["results"])
     with open(args.out, "w") as f:
         json.dump(merged, f, indent=1)
         f.write("\n")
+    _maybe_report(args)
     print(f"wrote {len(merged['results'])} records "
           f"({len(device_counts)}-point device axis) to {args.out}")
     return 0
+
+
+def _maybe_report(args) -> None:
+    """Emit the gearshifft-style Fig. 7 (backend x extent class x achieved
+    roofline fraction) from the document just written."""
+    if not getattr(args, "report", None):
+        return
+    report = fig7_report(load_bench(args.out))
+    with open(args.report, "w") as f:
+        f.write(report)
+    print(f"wrote Fig. 7 report to {args.report}")
 
 
 def main(argv=None) -> int:
@@ -502,6 +587,10 @@ def main(argv=None) -> int:
                         "replays (fallback-chain recovery, watchdog worker "
                         "restart) instead of the perf grid; exits nonzero "
                         "if any recovery invariant is violated")
+    p.add_argument("--report", default=None, metavar="PATH",
+                   help="also write the gearshifft-style Fig. 7 markdown "
+                        "(backend x extent class x achieved roofline "
+                        "fraction) rendered from the written document")
     p.add_argument("--_worker", action="store_true", help=argparse.SUPPRESS)
     args = p.parse_args(argv)
 
@@ -535,18 +624,21 @@ def main(argv=None) -> int:
     dev = jax.devices()[0]
     n_dev = jax.device_count()
     doc = {
-        "meta": {
-            "device_kind": dev.device_kind,
-            "platform": dev.platform,
-            "devices": n_dev,
-            "interpret_kernels": dev.platform != "tpu",
-            "python": platform.python_version(),
-            "jax": jax.__version__,
-            "batch": args.batch,
-            "reps": reps,
-            "note": "forward c64 transform, min-of-reps; gib_per_s assumes "
-                    "the one-read+one-write algorithmic minimum",
-        },
+        "meta": make_meta(
+            device_kind=dev.device_kind,
+            platform=dev.platform,
+            devices=n_dev,
+            interpret_kernels=dev.platform != "tpu",
+            python=platform.python_version(),
+            jax=jax.__version__,
+            batch=args.batch,
+            reps=reps,
+            note="forward c64 transform, min-of-reps (mean/sd/n per row); "
+                 "gib_per_s assumes the one-read+one-write algorithmic "
+                 "minimum; roofline_frac is the achieved fraction of the "
+                 "modeled device roofline (5*N*log2(N) flops, planner "
+                 "bytes-moved model)",
+        ),
         "results": [],
     }
     for ext in grid:
@@ -564,6 +656,7 @@ def main(argv=None) -> int:
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=1)
         f.write("\n")
+    _maybe_report(args)
     print(f"wrote {len(doc['results'])} records to {args.out}")
     return 0
 

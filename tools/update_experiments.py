@@ -26,7 +26,10 @@ PERF_CELLS = [("starcoder2-7b", "prefill_32k"),
 
 def _load(d, arch, shape):
     p = os.path.join(d, f"{arch}_{shape}_16-16.json")
-    return json.load(open(p)) if os.path.exists(p) else None
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
 
 
 def perf_table() -> str:
@@ -57,10 +60,12 @@ def main() -> None:
     table = markdown_table(rows)
     with open(os.path.join(ROOT, "experiments", "roofline_table.md"), "w") as f:
         f.write(table + "\n")
-    text = open(EXP).read()
+    with open(EXP) as f:
+        text = f.read()
     text = text.replace("<!-- ROOFLINE_TABLE -->", table)
     text = text.replace("<!-- PERF_TABLE -->", perf_table())
-    open(EXP, "w").write(text)
+    with open(EXP, "w") as f:
+        f.write(text)
     ok = sum(1 for r in rows if r.status == "ok")
     print(f"updated EXPERIMENTS.md: {len(rows)} rows ({ok} ok)")
 
