@@ -1,6 +1,7 @@
 """Paper Figs. 4-5: plan-rigor trade-offs — planning time vs transform time
-for ESTIMATE / MEASURE / WISDOM_ONLY (wisdom pre-generated like
-fftwf-wisdom)."""
+for ESTIMATE (hand-written *and* fitted cost model) / MEASURE / WISDOM_ONLY
+(wisdom pre-generated like fftwf-wisdom, via the planner's ``near=False``
+sweep — the same path ``tools/pregen_wisdom.py`` drives offline)."""
 
 from __future__ import annotations
 
@@ -8,13 +9,22 @@ import os
 import tempfile
 from dataclasses import replace
 
+from repro.core.client import Problem
 from repro.core.extents import parse_extents
-from repro.core.plan import PlanRigor
+from repro.core.plan import PlanRigor, make_plan
 from repro.core.suite import SuiteSpec
-from repro.core.wisdom import generate
+from repro.core.wisdom import Wisdom
 from .common import emit, run_suite
 
 EXTENTS = ("256", "2048", "16x16x16", "32x32x32")
+
+#: The committed fitted coefficient table (CI CPU device kind).  When it
+#: exists, the table gains an ``estimate_fitted`` column: the same instant
+#: ESTIMATE heuristic, ranked by regressed per-device coefficients instead
+#: of the hand-written defaults — the Fig. 4-5 story with a calibrated
+#: model in the loop.
+FITTED_TABLE = os.path.join(os.path.dirname(__file__), "baselines",
+                            "costmodel_cpu.json")
 
 # plan_cache=False: every repetition re-plans, the honest Figs. 4-5 cost
 SPEC = SuiteSpec(clients=("Planned",), extents=EXTENTS,
@@ -22,11 +32,34 @@ SPEC = SuiteSpec(clients=("Planned",), extents=EXTENTS,
                  warmups=1, plan_cache=False, output=None)
 
 
+def _pregenerate(exts, path: str) -> None:
+    """MEASURE-sweep every extent into a wisdom pack (``near=False``: a
+    pregeneration run must not inherit a neighbor's pick)."""
+    import jax
+
+    from repro.core.clients.jax_fft import build_forward
+
+    wisdom = Wisdom(path, device_kind=jax.devices()[0].device_kind)
+    for ext in exts:
+        problem = Problem(tuple(ext), "Inplace_Real", "float")
+        make_plan(problem, PlanRigor.MEASURE,
+                  build=lambda c, p=problem: build_forward(p, c),
+                  wisdom=wisdom, near=False)
+    wisdom.save()
+
+
+def _emit_rigor(label: str, results) -> None:
+    for a in results.aggregate_named(op="init_forward"):
+        emit(f"plan_time/{label}/{a.extents}", a.mean * 1e3)
+    for a in results.aggregate_named(op="execute_forward"):
+        emit(f"fft_time/{label}/{a.extents}", a.mean * 1e3)
+
+
 def run(reps: int = 3) -> None:
     exts = [parse_extents(e) for e in EXTENTS]
     with tempfile.TemporaryDirectory() as td:
         wpath = os.path.join(td, "wisdom.json")
-        generate(exts, wpath, rigor=PlanRigor.MEASURE, kinds=("Inplace_Real",))
+        _pregenerate(exts, wpath)
         for rigor in (PlanRigor.ESTIMATE, PlanRigor.MEASURE,
                       PlanRigor.WISDOM_ONLY):
             # wisdom only for the WISDOM_ONLY column: MEASURE with wisdom
@@ -35,8 +68,9 @@ def run(reps: int = 3) -> None:
             spec = replace(SPEC, repetitions=reps, rigor=rigor.value,
                            wisdom=wpath if rigor is PlanRigor.WISDOM_ONLY
                            else None)
-            results = run_suite(spec)
-            for a in results.aggregate_named(op="init_forward"):
-                emit(f"plan_time/{rigor.value}/{a.extents}", a.mean * 1e3)
-            for a in results.aggregate_named(op="execute_forward"):
-                emit(f"fft_time/{rigor.value}/{a.extents}", a.mean * 1e3)
+            _emit_rigor(rigor.value, run_suite(spec))
+    if os.path.exists(FITTED_TABLE):
+        spec = replace(SPEC, repetitions=reps,
+                       rigor=PlanRigor.ESTIMATE.value,
+                       costmodel=FITTED_TABLE)
+        _emit_rigor("estimate_fitted", run_suite(spec))

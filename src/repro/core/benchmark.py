@@ -91,20 +91,29 @@ def run_node(node: BenchNode, *, context: Context, config: BenchmarkConfig,
                else make_input(p, cfg.seed))
     runner = Runner(schedule, cfg.warmups, cfg.repetitions)
 
+    # `on_record` fires after each run with the run's client still live in
+    # `holder` — how every row of the run learns its plan's provenance
+    # (exact wisdom hit vs interpolated wisdom_near vs real sweep)
+    holder: dict = {}
+
     def emit(rec):
         # a warmup record carries only its cold-compile ops (negative
         # run index marks it as outside the counted repetitions)
         ops = (tuple(op for op, ev in rec.cache.items() if ev == "miss")
                if rec.warmup else schedule.op_names)
+        source = getattr(holder.get("client"), "plan_source", "")
         for op in ops:
             writer.add(Row(**base, run=rec.run, op=op,
                            time_ms=rec.times[op],
                            bytes=rec.nbytes.get(op, 0),
-                           plan_cache=rec.cache.get(op, "")))
+                           plan_cache=rec.cache.get(op, ""),
+                           plan_source=source))
 
     def make_client():
-        return node.client_cls(p, context, rigor=cfg.rigor,
-                               wisdom=wisdom, plan_cache=plan_cache)
+        holder["client"] = node.client_cls(p, context, rigor=cfg.rigor,
+                                           wisdom=wisdom,
+                                           plan_cache=plan_cache)
+        return holder["client"]
 
     try:
         _, last_out = runner.run(make_client, host_in, on_record=emit)

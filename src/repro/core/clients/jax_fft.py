@@ -271,7 +271,8 @@ class JaxFFTClient(FFTClient):
             cand = self.wisdom.lookup(self.problem, scope=self.backend_filter)
             if cand is not None and cand.backend == self.backend_filter:
                 return Plan(self.problem, cand, self.rigor,
-                            (_time.perf_counter() - t0) * 1e3)
+                            (_time.perf_counter() - t0) * 1e3,
+                            source="wisdom")
         if self.rigor is PlanRigor.WISDOM_ONLY:
             return None   # fftw NULL plan: no persisted selection, no sweep
         cands = [c for c in candidates(self.problem,
@@ -280,12 +281,15 @@ class JaxFFTClient(FFTClient):
         if measured and len(cands) > 1:
             cand, timings = measure_plan(self.problem, build, cands)
             if self.wisdom is not None:   # persist the tuned knobs
-                self.wisdom.record(self.problem, cand,
-                                   scope=self.backend_filter)
+                self.wisdom.record(
+                    self.problem, cand, scope=self.backend_filter,
+                    measured_ms=timings.get(cand.key()),
+                    rigor=self.rigor.value)
         else:
             cand, timings = cands[0], {}
         return Plan(self.problem, cand, self.rigor,
-                    (_time.perf_counter() - t0) * 1e3, timings)
+                    (_time.perf_counter() - t0) * 1e3, timings,
+                    source=self.rigor.value if timings else "estimate")
 
     def _select(self) -> Candidate | None:
         if self.plan_cache is not None:
@@ -303,6 +307,14 @@ class JaxFFTClient(FFTClient):
 
     def _device_kind(self) -> str:
         return getattr(self.context, "device_kind", "?")
+
+    @property
+    def plan_source(self) -> str:
+        """Where this client's plan came from (``Plan.source``) — surfaced
+        as the result rows' ``plan_source`` column when wisdom is attached,
+        so exact-``wisdom`` hits, interpolated ``wisdom_near`` warm starts,
+        and real sweeps stay distinguishable downstream."""
+        return self.plan.source if self.plan is not None else ""
 
     def init_forward(self) -> None:
         cand = self._select()

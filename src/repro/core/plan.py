@@ -12,6 +12,23 @@ fftw's planner concept (paper §2.1) mapped to JAX:
 Planning *time* is a first-class measurement (paper Figs. 4-5: MEASURE costs
 3-4 orders of magnitude more than ESTIMATE and can exceed the transform time
 by far) — the planner therefore reports plan_time_ms with every plan.
+
+This module is the planning *driver* plus the compatibility façade over the
+split-out layers — every historical ``from repro.core.plan import ...``
+keeps resolving:
+
+  :mod:`repro.core.candidates`  the search space: Candidate, feasibility
+                                predicates, backend registries, caps,
+                                candidate enumeration
+  :mod:`repro.core.costmodel`   the fittable bytes-moved model: CostModel,
+                                per-device coefficient tables, hbm_passes /
+                                estimate_bytes_moved / estimate_choice
+  :mod:`repro.core.breaker`     the (backend, problem-class) circuit breaker
+
+The cost functions re-exported here delegate to the **active** cost model
+(:func:`repro.core.costmodel.get_active_model`): installing a fitted
+per-device table re-ranks ESTIMATE picks, fallback chains, and the serve
+engine's chain memoization without any caller changing.
 """
 
 from __future__ import annotations
@@ -25,8 +42,24 @@ from typing import Any, Callable, Sequence
 import numpy as np
 
 from .client import Problem
-from .extents import (_factors_only, classify, next_pow2 as _next_pow2,
-                      next_smooth)
+
+# --- compatibility façade: the split-out planning layers -------------------
+from .candidates import (  # noqa: F401  (re-exported public surface)
+    BACKENDS, CHIRPZ_PALLAS_MAX_N, Candidate, DIST_A2A_COUNT, DIST_BACKENDS,
+    DIST_NATURAL_EXTRA, FFT2_PALLAS_MAX_ELEMS, FFT2_PALLAS_VMEM_ELEMS,
+    FOURSTEP_PALLAS_MAX_N, FUSED_ND, SIXSTEP_MAX_N, SIXSTEP_MIN_N,
+    STOCKHAM_PALLAS_MAX_N, STOCKHAM_PALLAS_VMEM_N, _dist_candidates,
+    _kernel_factorable, _mesh_devices, _mixed_candidates, _pencil_mesh_shapes,
+    _pow2, _sixstep_splits, _smooth, _smooth7, axis_engine_n, axis_feasible,
+    backend_supports, candidates, dist_local_lengths, dist_supports,
+    fft2_feasible)
+from .costmodel import (  # noqa: F401
+    DIST_A2A_LATENCY_BYTES, DIST_LINK_COST, CostCoefficients, CostModel,
+    Infeasible, _axis_elems, dist_local_engine, estimate_bytes_moved,
+    estimate_choice, get_active_model, hbm_passes, set_active_model,
+    use_model)
+from .breaker import (  # noqa: F401
+    CircuitBreaker, breaker_key, problem_class)
 
 
 class PlanRigor(enum.Enum):
@@ -34,52 +67,6 @@ class PlanRigor(enum.Enum):
     MEASURE = "measure"
     PATIENT = "patient"
     WISDOM_ONLY = "wisdom_only"
-
-
-@dataclass(frozen=True)
-class Candidate:
-    """One point in the planner's search space.
-
-    A candidate is either *homogeneous* (one backend applied per axis, or a
-    whole-transform backend from :data:`FUSED_ND`) or — when ``axes`` is
-    non-empty — a **per-axis assignment**: ``axes[i]`` transforms
-    ``extents[i]`` (outermost first), each with its own backend and knobs.
-    Per-axis candidates carry the placeholder backend ``'nd'``.
-
-    Distributed candidates (:data:`DIST_BACKENDS`) additionally carry the
-    **mesh shape** they decompose over — ``('slab', mesh=(4,))`` renders as
-    ``slab[4]``, ``('pencil', mesh=(2, 4))`` as ``pencil[2x4]`` — because a
-    selection tuned for one device count is meaningless for another, in
-    plan-cache keys and in wisdom alike.
-    """
-
-    backend: str          # 'xla' | 'stockham' | ... | 'slab' | 'nd'
-    options: tuple[tuple[str, Any], ...] = ()
-    axes: tuple["Candidate", ...] = ()   # per-axis assignment (ND-native)
-    mesh: tuple[int, ...] = ()           # device-mesh shape (distributed)
-
-    def opts(self) -> dict[str, Any]:
-        return dict(self.options)
-
-    def per_axis(self, rank: int) -> tuple["Candidate", ...]:
-        """The axis-by-axis assignment this candidate denotes: its explicit
-        ``axes``, or the same (backend, knobs) replicated across ``rank``."""
-        if self.axes:
-            if len(self.axes) != rank:
-                raise ValueError(
-                    f"candidate assigns {len(self.axes)} axes to a rank-"
-                    f"{rank} problem: {self.key()}")
-            return self.axes
-        return (Candidate(self.backend, self.options),) * rank
-
-    def key(self) -> str:
-        if self.axes:
-            return "nd[" + ";".join(a.key() for a in self.axes) + "]"
-        base = self.backend
-        if self.mesh:
-            base += "[" + "x".join(str(s) for s in self.mesh) + "]"
-        o = ",".join(f"{k}={v}" for k, v in self.options)
-        return f"{base}({o})" if o else base
 
 
 @dataclass
@@ -90,129 +77,11 @@ class Plan:
     plan_time_ms: float = 0.0
     measured_ms: dict[str, float] = field(default_factory=dict)  # per-candidate timings
     fallbacks: tuple[str, ...] = ()   # candidate keys demoted before this one
-
-
-# ---------------------------------------------------------------------------
-# Backend quarantine: circuit breaker over (backend, problem-class) pairs
-# ---------------------------------------------------------------------------
-def problem_class(problem: Problem) -> str:
-    """The quarantine granularity: a backend that fails for one oddshape
-    rank-2 problem is suspect for every oddshape rank-2 problem, but a
-    powerof2 rank-1 success says nothing about either."""
-    return f"{classify(problem.extents)}|r{problem.rank}"
-
-
-def breaker_key(backend: str, problem: Problem) -> str:
-    return f"{backend}|{problem_class(problem)}"
-
-
-class CircuitBreaker:
-    """Quarantine for (backend, problem-class) pairs that keep failing.
-
-    Classic three-state breaker, keyed by :func:`breaker_key`:
-
-      closed     pair is healthy; every attempt allowed
-      open       ``threshold`` consecutive failures seen — attempts denied
-                 until ``cooldown_s`` elapses
-      half_open  cooldown elapsed; exactly ONE probe attempt is allowed
-                 through.  Success re-closes the breaker, failure re-opens
-                 it (and restarts the cooldown).  If the probe never
-                 resolves (its thread died), a fresh probe is allowed after
-                 another cooldown, so a lost probe can't wedge the pair
-                 open forever.
-
-    Thread-safe: all transitions happen under one lock, and the totals
-    (``failures``/``successes``) are exact counts of the record calls —
-    the invariant the threaded hammer test pins.  ``clock`` is injectable
-    for deterministic tests.
-    """
-
-    CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
-
-    def __init__(self, threshold: int = 3, cooldown_s: float = 30.0,
-                 clock: Callable[[], float] = time.monotonic):
-        if threshold < 1:
-            raise ValueError(f"breaker threshold must be >= 1: {threshold}")
-        self.threshold = int(threshold)
-        self.cooldown_s = float(cooldown_s)
-        self._clock = clock
-        self._lock = threading.Lock()
-        self._entries: dict[str, dict] = {}
-
-    def _entry(self, key: str) -> dict:
-        e = self._entries.get(key)
-        if e is None:
-            e = self._entries[key] = {
-                "state": self.CLOSED, "consecutive": 0, "failures": 0,
-                "successes": 0, "opens": 0, "opened_at": 0.0,
-                "probe_at": None}
-        return e
-
-    def allows(self, key: str) -> bool:
-        """May the caller *attempt* this pair right now?  Claims the
-        half-open probe slot when it grants one — call only when about to
-        actually try (use :meth:`available` for side-effect-free checks)."""
-        now = self._clock()
-        with self._lock:
-            e = self._entry(key)
-            if e["state"] == self.CLOSED:
-                return True
-            if e["state"] == self.OPEN:
-                if now - e["opened_at"] < self.cooldown_s:
-                    return False
-                e["state"] = self.HALF_OPEN
-                e["probe_at"] = now
-                return True       # the cooldown-expiry probe
-            # HALF_OPEN: one outstanding probe at a time
-            if e["probe_at"] is not None \
-                    and now - e["probe_at"] < self.cooldown_s:
-                return False
-            e["probe_at"] = now   # previous probe was lost; allow another
-            return True
-
-    def available(self, key: str) -> bool:
-        """Side-effect-free: would an attempt plausibly be allowed?"""
-        with self._lock:
-            e = self._entries.get(key)
-            if e is None or e["state"] != self.OPEN:
-                return True
-            return self._clock() - e["opened_at"] >= self.cooldown_s
-
-    def record_failure(self, key: str) -> str:
-        """Count a failure; returns the pair's new state (``'open'`` means
-        this failure tripped — or re-tripped — the quarantine)."""
-        with self._lock:
-            e = self._entry(key)
-            e["failures"] += 1
-            e["consecutive"] += 1
-            if e["state"] == self.HALF_OPEN \
-                    or e["consecutive"] >= self.threshold:
-                if e["state"] != self.OPEN:
-                    e["opens"] += 1
-                e["state"] = self.OPEN
-                e["opened_at"] = self._clock()
-                e["probe_at"] = None
-            return e["state"]
-
-    def record_success(self, key: str) -> str:
-        with self._lock:
-            e = self._entry(key)
-            e["successes"] += 1
-            e["consecutive"] = 0
-            e["state"] = self.CLOSED
-            e["probe_at"] = None
-            return e["state"]
-
-    def state(self, key: str) -> str:
-        with self._lock:
-            e = self._entries.get(key)
-            return e["state"] if e else self.CLOSED
-
-    def snapshot(self) -> dict:
-        with self._lock:
-            return {k: {"state": e["state"], "failures": e["failures"],
-                        "successes": e["successes"], "opens": e["opens"]}
-                    for k, e in self._entries.items()}
+    #: Where the selection came from — 'estimate' | 'measure' | 'patient' |
+    #: 'wisdom' (exact persisted hit) | 'wisdom_near' (nearest-neighbor
+    #: interpolated warm start) | 'fallback' (chain walk after demotions).
+    #: Result rows surface this so interpolated picks stay distinguishable.
+    source: str = ""
 
 
 # ---------------------------------------------------------------------------
@@ -355,572 +224,16 @@ def executable_bytes(compiled) -> int:
         return 0
 
 
-def _pow2(n: int) -> bool:
-    return n >= 1 and (n & (n - 1)) == 0
-
-
-def _smooth(n: int) -> bool:
-    return n >= 1 and _factors_only(n, (2, 3, 5, 7, 11, 13))
-
-
-def _smooth7(n: int) -> bool:
-    """2^a*3^b*5^c*7^d — the extents the mixed-radix Stockham kernel
-    factors (paper's powerof2 + radix357 classes; shares the extent
-    classifier's ``_factors_only``)."""
-    return n >= 1 and _factors_only(n, (2, 3, 5, 7))
-
-
-#: Feasibility caps for the fused kernel paths (see the kernel modules).
-FOURSTEP_PALLAS_MAX_N = 128 * 128        # one fused four-step kernel pass
-STOCKHAM_PALLAS_MAX_N = 1 << 20          # ops.MAX_N: single-kernel hard cap
-STOCKHAM_PALLAS_VMEM_N = 1 << 15         # fits a useful batch tile in VMEM
-SIXSTEP_MIN_N, SIXSTEP_MAX_N = 4, 1 << 24
-FFT2_PALLAS_MAX_ELEMS = 1 << 18          # fft2 ops.MAX_ELEMS: hard cap
-FFT2_PALLAS_VMEM_ELEMS = 1 << 16         # n1*n2 tile fits the VMEM budget
-#: Largest chirp-Z length whose padded transform (next_pow2(2n-1)) still
-#: fits the six-step composition's SIXSTEP_MAX_N = 2^24.
-CHIRPZ_PALLAS_MAX_N = 1 << 23
-
-#: Whole-transform backends: one engine call covers every axis, so the
-#: separable path's swapaxes traffic never happens.
-FUSED_ND = ("xla", "fft2_pallas")
-
-#: Every backend the planner knows, in enumeration (preference-tie) order.
-BACKENDS = ("xla", "stockham", "fourstep", "dft", "fourstep_pallas",
-            "stockham_pallas", "sixstep", "fft2_pallas", "chirpz_pallas",
-            "bluestein")
-
-#: Mesh-sharded decompositions (fft/distributed.py) — enumerated only when
-#: an active mesh is installed (launch.mesh.set_active_mesh), and kept out
-#: of :data:`BACKENDS` so single-device planning and the conformance
-#: support matrix are byte-identical without one.
-DIST_BACKENDS = ("dist1d", "slab", "pencil")
-
-#: Interconnect cost of one all-to-all'd byte relative to one HBM byte —
-#: ICI/NVLink-class fabrics move bytes at a small single-digit multiple of
-#: HBM cost; this single coefficient is what lets ESTIMATE rank "one
-#: device, one HBM touch" against "P devices, two all-to-alls" honestly.
-DIST_LINK_COST = 4.0
-#: Fixed per-collective charge (latency, layout fix-ups) expressed in
-#: equivalent HBM bytes — keeps tiny transforms from sharding: below ~1 MiB
-#: the collective's constant cost dwarfs any compute win.
-DIST_A2A_LATENCY_BYTES = float(1 << 20)
-#: all_to_alls per decomposition in the default TRANSPOSED-output layout.
-DIST_A2A_COUNT = {"dist1d": 2, "slab": 1, "pencil": 2}
-#: extra all_to_alls for natural-order output.
-DIST_NATURAL_EXTRA = {"dist1d": 1, "slab": 1, "pencil": 2}
-
-
-def axis_feasible(backend: str, n: int) -> bool:
-    """Can ``backend`` transform one batched axis of extent ``n``?  This is
-    the engine-level contract: the length the cfft actually receives — n//2
-    for the packed r2c innermost axis of an EVEN real extent, the full
-    length for an odd one, see ``axis_engine_n``.  The chirp backends are
-    the any-length catch-all, so odd-length real kinds explicitly route to
-    the full-complex chirp path rather than a meaningless packed half."""
-    if backend in ("xla", "bluestein"):
-        return True
-    if backend == "stockham":
-        return _pow2(n)
-    if backend == "fourstep":
-        return _smooth(n)
-    if backend == "dft":
-        return n <= 128
-    if backend == "fourstep_pallas":
-        return _kernel_factorable(n)
-    if backend == "stockham_pallas":
-        return _smooth7(n) and n <= STOCKHAM_PALLAS_MAX_N
-    if backend == "chirpz_pallas":
-        # any length whose padded pow2 transform the fused engines cover
-        return 1 <= n <= CHIRPZ_PALLAS_MAX_N
-    if backend == "sixstep":
-        # the engine falls back to the fused Stockham kernel below
-        # SIXSTEP_MIN_N (packed-real halves can land there)
-        return _pow2(n) and n <= SIXSTEP_MAX_N and n >= 2
-    return False
-
-
-def axis_engine_n(problem: Problem, axis: int) -> int:
-    """Extent the 1-D engine actually transforms along ``axis``.
-
-    Real kinds take the packed half-length path on the innermost axis (the
-    cfft runs at n//2 for even n; odd lengths pay the full complex
-    transform), so feasibility and the cost model must look at that length,
-    not the nominal extent."""
-    n = problem.extents[axis]
-    if problem.complex_input or axis < problem.rank - 1:
-        return n
-    return n // 2 if n % 2 == 0 and n > 1 else n
-
-
-def fft2_feasible(problem: Problem) -> bool:
-    """The fused rank-2 kernel holds the whole n1 x n2 tile in VMEM."""
-    exts = problem.extents
-    return (len(exts) == 2 and all(_pow2(v) for v in exts)
-            and exts[0] * exts[1] <= FFT2_PALLAS_MAX_ELEMS
-            and (problem.complex_input or exts[-1] % 2 == 0))
-
-
-def backend_supports(backend: str, problem: Problem) -> bool:
-    """Single source of truth for the support matrix: candidates(), the
-    conformance matrix, and the README table all consult this."""
-    if backend == "fft2_pallas":
-        return fft2_feasible(problem)
-    if backend == "xla":
-        return True
-    if backend == "sixstep":
-        # offered only where the six-step composition is the real algorithm
-        if not all(_pow2(v) and SIXSTEP_MIN_N <= v <= SIXSTEP_MAX_N
-                   for v in problem.extents):
-            return False
-    return all(axis_feasible(backend, axis_engine_n(problem, i))
-               for i in range(problem.rank))
-
-
-# ---------------------------------------------------------------------------
-# Distributed candidates: slab / pencil / dist1d over the active mesh
-# ---------------------------------------------------------------------------
-def _mesh_devices(mesh) -> int:
-    """Device count of a mesh (or mesh-shaped stand-in with ``.size``)."""
-    return int(mesh.size)
-
-
-def dist_supports(backend: str, problem: Problem,
-                  mesh_shape: Sequence[int]) -> bool:
-    """Can ``backend`` decompose ``problem`` over a mesh of ``mesh_shape``?
-
-    Distribution is complex-kinds-only: the packed r2c half-spectrum extents
-    (n//2, n//2+1) break the tiled all_to_all divisibility that every
-    rotation depends on.  ``dist1d`` additionally needs batch == 1 — its
-    matrix view consumes the whole axis.
-    """
-    if not problem.complex_input:
-        return False
-    from repro.fft import distributed as dist
-
-    shape = tuple(int(s) for s in mesh_shape)
-    p = 1
-    for s in shape:
-        p *= s
-    if p < 2:
-        return False   # one device: decomposition is pure overhead
-    if backend == "dist1d":
-        return (problem.rank == 1 and problem.batch == 1
-                and dist.can_shard_1d(problem.extents[0], p))
-    if backend == "slab":
-        return (len(shape) == 1 and problem.rank in (2, 3)
-                and dist.slab_divisible(problem.extents, p))
-    if backend == "pencil":
-        return (len(shape) == 2 and problem.rank == 3
-                and dist.pencil_divisible(problem.extents, *shape))
-    return False
-
-
-def _pencil_mesh_shapes(p: int, patient: bool = False) -> list[tuple[int, int]]:
-    """(Pr, Pc) factorizations of ``p``: the most balanced one by default,
-    widened to (at most four) alternates under PATIENT."""
-    shapes = [(pr, p // pr) for pr in range(2, int(p ** 0.5) + 1)
-              if p % pr == 0]
-    shapes.sort(key=lambda s: s[1] - s[0])
-    if not patient:
-        return shapes[:1]
-    out = list(shapes)
-    out += [(pc, pr) for pr, pc in shapes if pr != pc]
-    return out[:4]
-
-
-def dist_local_lengths(problem: Problem, cand: Candidate
-                       ) -> list[tuple[int, float]]:
-    """The local sub-transform lengths a distributed candidate runs per
-    shard, each with the swapaxes passes its position costs (+2 when the
-    transform axis is not innermost in the local block, like the separable
-    single-device path; 0 for the innermost axis)."""
-    p = 1
-    for s in cand.mesh:
-        p *= s
-    if cand.backend == "dist1d":
-        from repro.fft.distributed import _choose_1d_factors
-
-        n1, n2 = _choose_1d_factors(problem.extents[0], p)
-        return [(n1, 2.0), (n2, 0.0)]
-    # slab / pencil transform every global axis at its full extent locally
-    return [(n, 0.0 if i == problem.rank - 1 else 2.0)
-            for i, n in enumerate(problem.extents)]
-
-
-def dist_local_engine(n: int) -> str:
-    """The separable backend a distributed plan runs locally at length
-    ``n`` when no explicit ``local`` knob forces one: fewest modeled HBM
-    passes, ties to the earlier (more conservative) BACKENDS entry."""
-    best, best_p = "fourstep", float("inf")
-    for b in BACKENDS:
-        if b in FUSED_ND:
-            continue
-        if axis_feasible(b, n):
-            passes = hbm_passes(b, n)
-            if passes < best_p:
-                best, best_p = b, passes
-    return best
-
-
-def _dist_candidates(problem: Problem, mesh, patient: bool
-                     ) -> list[Candidate]:
-    """Sharded decompositions feasible for ``problem`` over ``mesh``.
-
-    PATIENT widens with the decomposition x local-engine cross: alternate
-    pencil mesh factorizations, and each feasible local engine forced via
-    the ``local`` knob (the distributed analogue of the kernel tile
-    sweeps)."""
-    p = _mesh_devices(mesh)
-    if p < 2:
-        return []
-    out: list[Candidate] = []
-    if dist_supports("dist1d", problem, (p,)):
-        out.append(Candidate("dist1d", mesh=(p,)))
-    if dist_supports("slab", problem, (p,)):
-        out.append(Candidate("slab", mesh=(p,)))
-    for shape in _pencil_mesh_shapes(p, patient):
-        if dist_supports("pencil", problem, shape):
-            out.append(Candidate("pencil", mesh=shape))
-    if patient:
-        extra = []
-        for c in out:
-            lengths = [n for n, _ in dist_local_lengths(problem, c)]
-            default = {dist_local_engine(n) for n in lengths}
-            locals_ = [b for b in BACKENDS
-                       if b not in FUSED_ND and b not in default
-                       and all(axis_feasible(b, n) for n in lengths)
-                       and all(hbm_passes(b, n) != float("inf")
-                               for n in lengths)]
-            locals_.sort(key=lambda b: sum(hbm_passes(b, n) for n in lengths))
-            extra += [Candidate(c.backend, (("local", b),), mesh=c.mesh)
-                      for b in locals_[:2]]
-        out += extra
-    return out
-
-
-def candidates(problem: Problem, patient: bool = False,
-               mesh=None) -> list[Candidate]:
-    """Enumerate feasible (backend, knob) combinations for a problem.
-
-    The space is ND-native: besides homogeneous candidates (one backend for
-    every axis) it holds the whole-transform backends (``xla``, and the
-    fused rank-2 ``fft2_pallas`` kernel) and **per-axis assignments**
-    (``Candidate.axes``) mixing backends across axes, pruned by the
-    bytes-moved model.  ``patient=True`` widens the space with the fused
-    kernels' tunable knobs — batch tiles, the (mixed-)radix schedule, the
-    six-step n1*n2 split, the fft2 radix, the chirp-Z padded-engine choice
-    — the FFTW_PATIENT analogue of searching algorithm *and* implementation
-    parameters.
-
-    ``mesh`` gates the distributed decompositions: ``None`` consults the
-    active mesh (``launch.mesh.get_active_mesh``), which is itself None
-    unless a launcher installed one — so single-process planning never
-    offers a multi-device plan.
-    """
-    exts = problem.extents
-    out: list[Candidate] = [Candidate("xla")]
-    # every backend — the chirp catch-alls included — goes through
-    # backend_supports, which evaluates feasibility at the ENGINE length:
-    # odd-length real kinds route to the full-complex chirp path (engine
-    # length n, not the even-only packed n//2) and caps apply there
-    for b in BACKENDS[1:]:
-        if backend_supports(b, problem):
-            out.append(Candidate(b))
-    if problem.rank >= 2:
-        out += _mixed_candidates(problem, limit=12 if patient else 6)
-    if mesh is None:
-        from repro.launch.mesh import get_active_mesh
-
-        mesh = get_active_mesh()
-    if mesh is not None:
-        out += _dist_candidates(problem, mesh, patient)
-    if patient:
-        extra = []
-        for c in out:
-            if c.options or c.axes:
-                continue
-            if c.backend == "fourstep_pallas":
-                for tb in (4, 8, 16):
-                    extra.append(Candidate("fourstep_pallas", (("tile_b", tb),)))
-            elif c.backend == "stockham_pallas":
-                for tb in (4, 16):
-                    for radix in (4, 8):
-                        extra.append(Candidate(
-                            "stockham_pallas",
-                            (("radix", radix), ("tile_b", tb))))
-            elif c.backend == "sixstep":
-                for n1 in _sixstep_splits(exts[-1]):
-                    extra.append(Candidate("sixstep", (("split_n1", n1),)))
-                extra.append(Candidate("sixstep", (("tile_b", 16),)))
-            elif c.backend == "chirpz_pallas":
-                # a forced engine applies to EVERY axis the separable path
-                # transforms, so gate each knob on every axis's engine
-                # length (_sixstep_splits rule: only emit knobs the engine
-                # actually honors, never ones that raise at build time)
-                eng_ns = [axis_engine_n(problem, i)
-                          for i in range(problem.rank)]
-                engines = []
-                if all(next_smooth(2 * v - 1) <= STOCKHAM_PALLAS_MAX_N
-                       for v in eng_ns):
-                    engines.append("stockham_pallas")  # smooth-m padding
-                if all(SIXSTEP_MIN_N <= _next_pow2(2 * v - 1)
-                       <= SIXSTEP_MAX_N for v in eng_ns):
-                    engines.append("sixstep")
-                for eng in engines:
-                    extra.append(Candidate("chirpz_pallas",
-                                           (("engine", eng),)))
-                extra.append(Candidate("chirpz_pallas", (("tile_b", 16),)))
-            elif c.backend == "fft2_pallas":
-                for tb in (2, 8):
-                    for radix in (4, 8):
-                        extra.append(Candidate(
-                            "fft2_pallas",
-                            (("radix", radix), ("tile_b", tb))))
-        out += extra
-    return out
-
-
-def _mixed_candidates(problem: Problem, limit: int) -> list[Candidate]:
-    """Per-axis backend assignments, pruned by the bytes-moved model.
-
-    For each axis, rank the separable backends by modeled engine passes at
-    that axis's (packed) extent and keep the best two; the cross product —
-    minus homogeneous assignments, which are already enumerated — is then
-    re-ranked by the full ND model and truncated to ``limit``.  This is how
-    the planner expresses e.g. 'dft on the tiny outer axis, fused Stockham
-    on the long inner one' without sweeping every combination."""
-    import itertools
-
-    per_axis: list[list[str]] = []
-    for i in range(problem.rank):
-        n_eng = axis_engine_n(problem, i)
-        feas = [b for b in BACKENDS
-                if b not in FUSED_ND and axis_feasible(b, n_eng)]
-        feas.sort(key=lambda b: hbm_passes(b, n_eng))
-        per_axis.append(feas[:2])
-    scored = []
-    for combo in itertools.product(*per_axis):
-        if len(set(combo)) == 1:
-            continue  # homogeneous: already in the candidate list
-        cand = Candidate("nd", axes=tuple(Candidate(b) for b in combo))
-        cost = estimate_bytes_moved(problem, cand)
-        if cost != float("inf"):
-            scored.append((cost, cand))
-    scored.sort(key=lambda t: t[0])
-    return [cand for _, cand in scored[:limit]]
-
-
-def _sixstep_splits(n: int) -> list[int]:
-    """Alternative n = n1*n2 residual splits for the PATIENT sweep: the
-    balanced split and a residual-heavy one, besides the default.  Both
-    sixstep.choose_split constraints apply — n1 <= 2^10 (the residual
-    VMEM cap) and n2 <= 2^14 — so every emitted knob is one the engine
-    actually honors rather than silently replacing with the default."""
-    if not _pow2(n) or n < SIXSTEP_MIN_N:
-        return []
-    k = n.bit_length() - 1
-    default_k1 = k - min(14, k - 1)
-    opts = {max(1, k // 2), max(1, min(10, k - 1))} - {default_k1}
-    return sorted(1 << k1 for k1 in opts
-                  if 1 <= k1 <= 10 and k - k1 <= 14)
-
-
-def _kernel_factorable(n: int) -> bool:
-    """n = n1*n2 with both <= 128 (single fused fft4step kernel pass)."""
-    if n > FOURSTEP_PALLAS_MAX_N:
-        return False
-    for n1 in range(min(128, n), 0, -1):
-        if n % n1 == 0 and n // n1 <= 128:
-            return True
-    return False
-
-
-# ---------------------------------------------------------------------------
-# ESTIMATE cost model: modeled HBM traffic per backend
-# ---------------------------------------------------------------------------
-def hbm_passes(backend: str, n: int) -> float:
-    """Modeled HBM round-trips of the whole signal for one length-n
-    transform (the quantity that dominates above the paper's ~1 MiB
-    boundary).  ``inf`` marks an infeasible / VMEM-overflowing choice.
-
-    The fused kernels are the reason this model exists: stockham_pallas and
-    fourstep_pallas read and write the signal exactly once, the six-step
-    composition a small constant (2 kernel passes + 3 transposes), while
-    the staged jnp Stockham pays one pass per radix-2 stage.
-    """
-    inf = float("inf")
-    if backend == "xla":
-        if _smooth7(n):
-            return 2.0  # vendor path: multi-stage but heavily fused
-        # non-smooth lengths send the vendor library down its own chirp
-        # fallback: ~3 fused transforms at the padded pow2 length
-        return 6.0 * (_next_pow2(2 * n - 1) / n)
-    if backend == "stockham":
-        if not _pow2(n):
-            return inf
-        return float(max(1, n.bit_length() - 1))   # one pass per stage
-    if backend == "fourstep":
-        if not _smooth(n):
-            return inf
-        levels = 1
-        m = n
-        while m > 128:
-            m = -(-m // 128)
-            levels += 1
-        return 2.0 * levels
-    if backend == "dft":
-        return 1.0 if n <= 128 else inf
-    if backend == "fourstep_pallas":
-        return 1.0 if _kernel_factorable(n) else inf
-    if backend == "stockham_pallas":
-        # any 7-smooth length is one mixed-radix kernel pass; beyond the
-        # VMEM tile budget the kernel can't hold a batch row
-        return 1.0 if _smooth7(n) and n <= STOCKHAM_PALLAS_VMEM_N else inf
-    if backend == "sixstep":
-        if _pow2(n) and SIXSTEP_MIN_N <= n <= SIXSTEP_MAX_N:
-            return 5.0  # 2 fused kernel passes + 3 transpose passes
-        return inf
-    if backend == "chirpz_pallas":
-        if not 1 <= n <= CHIRPZ_PALLAS_MAX_N:
-            return inf
-        # two fused padded transforms + chirp mul, filter mul, final chirp;
-        # the filter spectrum is host-cached so no third transform runs.
-        # The mixed-radix kernel convolves at the smallest 7-SMOOTH
-        # m >= 2n-1 (often ~2x tighter than pow2); sixstep needs pow2.
-        ms = next_smooth(2 * n - 1)
-        if ms <= STOCKHAM_PALLAS_VMEM_N:
-            return 5.0 * (ms / n)                 # 2*1 engine passes + 3
-        return 13.0 * (_next_pow2(2 * n - 1) / n)  # 2*5 sixstep passes + 3
-    if backend == "bluestein":
-        m = 1
-        while m < 2 * n - 1:
-            m *= 2
-        # 3 staged Stockham transforms of padded length m, + chirp setup
-        return (3.0 * max(1, m.bit_length() - 1) + 2.0) * (m / n)
-    return inf
-
-
-def _axis_elems(problem: Problem, axis: int) -> int:
-    """Complex elements the transform carries while working on ``axis``.
-
-    Complex kinds move the whole signal on every axis.  Real kinds run the
-    innermost axis packed at half the elements (even n) and every outer
-    axis on the half-spectrum — n_last//2 + 1 bins along the last axis —
-    which is the traffic halving the paper's Fig. 8a measures."""
-    if problem.complex_input:
-        return problem.n_elems
-    n_last = problem.extents[-1]
-    rows = problem.n_elems // n_last
-    if axis == problem.rank - 1:
-        return rows * (n_last // 2) if n_last % 2 == 0 else problem.n_elems
-    return rows * (n_last // 2 + 1)
-
-
-def estimate_bytes_moved(problem: Problem, cand: Candidate) -> float:
-    """Modeled HBM bytes for the full nd transform under ``cand``.
-
-    Whole-transform backends (:data:`FUSED_ND`) move the signal their fixed
-    number of passes with **no** transpose traffic.  Separable assignments
-    charge, per axis: the engine's ``hbm_passes`` at the extent the engine
-    actually sees (packed half-length on a real innermost axis), *plus* the
-    two swapaxes passes ``nd._apply_last`` really performs for every
-    non-innermost axis — zero for the innermost one.  Each pass reads and
-    writes the live elements once (see :func:`_axis_elems` for the r2c
-    half-spectrum sizes).  ``inf`` marks an infeasible assignment.
-
-    Distributed candidates (:data:`DIST_BACKENDS`) model the **per-device**
-    cost — what bounds wall time when every device works in parallel: the
-    local per-axis engine passes on the 1/P-sized shard, plus the
-    interconnect term — each all_to_all moves the device's whole block once,
-    charged at :data:`DIST_LINK_COST` HBM-equivalent bytes per byte plus the
-    fixed :data:`DIST_A2A_LATENCY_BYTES` per collective.  That latency floor
-    is why small transforms never shard and the single-/multi-device
-    crossover sits where it does.
-    """
-    complex_itemsize = 16 if problem.precision == "double" else 8
-    if cand.backend in DIST_BACKENDS:
-        p = 1
-        for s in cand.mesh:
-            p *= s
-        if not dist_supports(cand.backend, problem, cand.mesh):
-            return float("inf")
-        opts = cand.opts()
-        forced = opts.get("local")
-        passes = 0.0
-        for n_g, swaps in dist_local_lengths(problem, cand):
-            b = forced or dist_local_engine(n_g)
-            hp = hbm_passes(b, n_g)
-            if hp == float("inf") or not axis_feasible(b, n_g):
-                return float("inf")
-            passes += hp + swaps
-        if cand.backend == "dist1d":
-            passes += 1.0   # the per-shard twiddle multiply
-        dev_bytes = (problem.n_elems / p) * complex_itemsize
-        n_a2a = DIST_A2A_COUNT[cand.backend]
-        if opts.get("natural"):
-            n_a2a += DIST_NATURAL_EXTRA[cand.backend]
-        return (passes * 2.0 * dev_bytes
-                + n_a2a * (dev_bytes * DIST_LINK_COST
-                           + DIST_A2A_LATENCY_BYTES))
-    if cand.backend in FUSED_ND:
-        elems = _axis_elems(problem, problem.rank - 1)
-        if cand.backend == "xla":
-            # vendor path: 2 fused passes on smooth extents; a non-smooth
-            # axis drags the whole transform into its chirp fallback
-            passes = max(hbm_passes("xla", axis_engine_n(problem, i))
-                         for i in range(problem.rank))
-        else:              # fft2_pallas: one read + one write of the tile
-            # the VMEM budget binds the tile the kernel actually holds:
-            # real kinds run packed, so the inner extent halves (even n)
-            tile_elems = (problem.extents[0] *
-                          axis_engine_n(problem, problem.rank - 1))
-            feasible = (fft2_feasible(problem)
-                        and tile_elems <= FFT2_PALLAS_VMEM_ELEMS)
-            passes = 1.0 if feasible else float("inf")
-        return passes * 2.0 * elems * complex_itemsize
-    total = 0.0
-    for axis, ax_cand in enumerate(cand.per_axis(problem.rank)):
-        passes = hbm_passes(ax_cand.backend, axis_engine_n(problem, axis))
-        if axis != problem.rank - 1:
-            passes += 2.0   # swapaxes in + out around the engine call
-        total += passes * 2.0 * _axis_elems(problem, axis) * complex_itemsize
-    return total
-
-
-def estimate_choice(problem: Problem) -> Candidate:
-    """The ESTIMATE heuristic: a static bytes-moved cost model.
-
-    Mirrors fftw's 'probably sub-optimal but instant' behavior: tiny rank-1
-    problems go straight to the single-matmul dft kernel (launch overhead
-    dominates traffic there); everything else takes the feasible candidate
-    that moves the fewest modeled HBM bytes (ties keep the earlier, more
-    conservative entry — the vendor path is enumerated first, per-axis
-    mixed assignments last).
-    """
-    cands = candidates(problem)
-    by_backend = {c.backend: c for c in cands}
-    n_inner = problem.extents[-1]
-    if "dft" in by_backend and n_inner <= 128 and problem.rank == 1:
-        return by_backend["dft"]
-    best, best_cost = None, float("inf")
-    for c in cands:
-        cost = estimate_bytes_moved(problem, c)
-        if cost < best_cost:
-            best, best_cost = c, cost
-    if best is not None:
-        return best
-    return by_backend.get("xla", by_backend["bluestein"])
-
-
 def fallback_chain(problem: Problem, patient: bool = False,
                    mesh=None) -> list[Candidate]:
     """The ordered degradation path: ESTIMATE's pick first (its dft pin for
     tiny rank-1 problems included), then every other feasible candidate by
     ascending modeled cost, with a plain ``xla`` candidate guaranteed
-    present — the always-feasible terminal fallback.  Pure ordering: the
-    walkers (:func:`make_plan`'s fault-tolerant mode, the serve engine)
-    apply wisdom-demotion and circuit-breaker filtering at try time."""
+    present — the always-feasible terminal fallback.  Pure ordering under
+    the *active* cost model — a fitted per-device table re-ranks the chain
+    for every walker: the walkers (:func:`make_plan`'s fault-tolerant mode,
+    the serve engine) apply wisdom-demotion and circuit-breaker filtering
+    at try time."""
     cands = candidates(problem, patient=patient, mesh=mesh)
     scored = [(estimate_bytes_moved(problem, c), i, c)
               for i, c in enumerate(cands)]
@@ -987,6 +300,22 @@ def _demoted_backends(wisdom, problem: Problem) -> frozenset:
     return demoted(problem) if callable(demoted) else frozenset()
 
 
+def _near_lookup(wisdom, problem: Problem, demoted: frozenset):
+    """Nearest-neighbor wisdom consultation (schema v3): a candidate tuned
+    for the closest same-feasibility-class shape, or None.  Duck-typed so
+    pre-v3 stores (and stand-ins without ``lookup_near``) just miss."""
+    near = getattr(wisdom, "lookup_near", None)
+    if near is None:
+        return None
+    hit = near(problem)
+    if hit is None:
+        return None
+    cand, _neighbor = hit
+    if cand.backend in demoted and cand.backend != "xla":
+        return None
+    return cand
+
+
 def _fallback_plan(problem: Problem, rigor: PlanRigor,
                    build: Callable[[Candidate], Callable], wisdom,
                    breaker: CircuitBreaker, probe: bool, t0: float,
@@ -1025,7 +354,8 @@ def _fallback_plan(problem: Problem, rigor: PlanRigor,
             continue
         breaker.record_success(breaker_key(cand.backend, problem))
         return Plan(problem, cand, rigor, (time.perf_counter() - t0) * 1e3,
-                    fallbacks=tuple(fallbacks))
+                    fallbacks=tuple(fallbacks),
+                    source="fallback" if fallbacks else "estimate")
     raise RuntimeError(
         f"no feasible plan for {problem.signature()}: all {len(chain)} "
         f"candidates failed (last: {type(last_err).__name__}: {last_err})")
@@ -1034,13 +364,19 @@ def _fallback_plan(problem: Problem, rigor: PlanRigor,
 def make_plan(problem: Problem, rigor: PlanRigor,
               build: Callable[[Candidate], Callable] | None = None,
               wisdom=None, breaker: CircuitBreaker | None = None,
-              probe: bool = False) -> Plan | None:
+              probe: bool = False, near: bool = True) -> Plan | None:
     """The planner. Returns None for WISDOM_ONLY misses (fftw NULL plan).
 
     MEASURE/PATIENT consult wisdom first, fftw-style: a persisted selection
     for this (device, problem) short-circuits the candidate sweep entirely,
     so a warm Session (or a second process sharing the wisdom file) plans in
-    microseconds instead of re-compiling every candidate.
+    microseconds instead of re-compiling every candidate.  On an exact miss
+    a schema-v3 wisdom store is consulted for a **nearest-neighbor** warm
+    start (``Wisdom.lookup_near``): the selection tuned for the closest
+    shape in the same backend-feasibility class, returned with plan source
+    ``'wisdom_near'`` so results stay honest.  ``near=False`` disables the
+    interpolated path — the pregeneration tools use it so every swept shape
+    gets a real sweep rather than inheriting its neighbor's pick.
 
     Fault tolerance: with both ``build`` and ``breaker`` supplied, planning
     walks the :func:`fallback_chain` instead — each candidate is actually
@@ -1056,16 +392,33 @@ def make_plan(problem: Problem, rigor: PlanRigor,
         if wisdom is None:
             return None
         cand = wisdom.lookup(problem)
-        if cand is None:
-            return None
-        return Plan(problem, cand, rigor, (time.perf_counter() - t0) * 1e3)
+        if cand is not None:
+            return Plan(problem, cand, rigor,
+                        (time.perf_counter() - t0) * 1e3, source="wisdom")
+        if near:
+            cand = _near_lookup(wisdom, problem,
+                                _demoted_backends(wisdom, problem))
+            if cand is not None:
+                return Plan(problem, cand, rigor,
+                            (time.perf_counter() - t0) * 1e3,
+                            source="wisdom_near")
+        return None
 
     demoted = _demoted_backends(wisdom, problem)
     if wisdom is not None and rigor in (PlanRigor.MEASURE, PlanRigor.PATIENT):
         cand = wisdom.lookup(problem)
         if cand is not None and cand.backend not in demoted:
             # tuned knobs persisted by an earlier sweep
-            return Plan(problem, cand, rigor, (time.perf_counter() - t0) * 1e3)
+            return Plan(problem, cand, rigor,
+                        (time.perf_counter() - t0) * 1e3, source="wisdom")
+        if cand is None and near:
+            # nearest-neighbor warm start: MEASURE-grade pick without the
+            # sweep — the selection tuned for the closest same-class shape
+            cand = _near_lookup(wisdom, problem, demoted)
+            if cand is not None:
+                return Plan(problem, cand, rigor,
+                            (time.perf_counter() - t0) * 1e3,
+                            source="wisdom_near")
 
     if build is not None and breaker is not None:
         return _fallback_plan(problem, rigor, build, wisdom, breaker, probe,
@@ -1085,12 +438,15 @@ def make_plan(problem: Problem, rigor: PlanRigor,
             cands = [c for c in cands
                      if c.backend == "xla" or c.backend not in demoted]
         cand, timings = measure_plan(problem, build, cands)
-    plan = Plan(problem, cand, rigor, (time.perf_counter() - t0) * 1e3, timings)
+    plan = Plan(problem, cand, rigor, (time.perf_counter() - t0) * 1e3,
+                timings, source=rigor.value if timings else "estimate")
     # persist only selections a sweep actually timed: a build-less
     # MEASURE/PATIENT call falls back to the untimed ESTIMATE pick, and
     # recording that would let the wisdom-first short-circuit lock it in
     # forever as if it had been measured
     if wisdom is not None and timings \
             and rigor in (PlanRigor.MEASURE, PlanRigor.PATIENT):
-        wisdom.record(problem, cand)
+        wisdom.record(problem, cand,
+                      measured_ms=timings.get(cand.key()),
+                      rigor=rigor.value)
     return plan

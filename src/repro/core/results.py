@@ -37,11 +37,22 @@ COLUMNS = [
 #: Extra column emitted when the plan/executable cache is enabled.
 PLAN_CACHE_COLUMN = "plan_cache"
 
+#: Extra column emitted when a wisdom store is attached: where the plan
+#: came from (``estimate``/``measure``/``patient``/``wisdom``/
+#: ``wisdom_near``/``fallback``) — the provenance that makes interpolated
+#: ``wisdom_near`` picks auditable in downstream analysis.
+PLAN_SOURCE_COLUMN = "plan_source"
 
-def columns_for(plan_cache: bool) -> list[str]:
+
+def columns_for(plan_cache: bool, plan_source: bool = False) -> list[str]:
     """Result schema: seed columns, plus cold/warm cache accounting when the
-    plan cache is on."""
-    return COLUMNS + [PLAN_CACHE_COLUMN] if plan_cache else list(COLUMNS)
+    plan cache is on, plus plan provenance when wisdom is attached."""
+    cols = list(COLUMNS)
+    if plan_cache:
+        cols.append(PLAN_CACHE_COLUMN)
+    if plan_source:
+        cols.append(PLAN_SOURCE_COLUMN)
+    return cols
 
 
 @dataclass
@@ -61,6 +72,7 @@ class Row:
     success: bool = True
     error: str = ""
     plan_cache: str = ""   # ''|'hit'|'miss' (column present only when caching)
+    plan_source: str = ""  # Plan.source (column present only with wisdom)
 
     def as_list(self, columns: list[str] = COLUMNS):
         return [getattr(self, c) for c in columns]

@@ -28,6 +28,7 @@ import importlib
 import json
 import os
 import statistics
+from contextlib import nullcontext
 from dataclasses import dataclass, fields
 from typing import Any, Iterable, Iterator, Optional, Sequence
 
@@ -129,6 +130,7 @@ class SuiteSpec:
     seed: int = 2017
     plan_cache: bool = True
     wisdom: Optional[str] = None                # wisdom JSON path
+    costmodel: Optional[str] = None             # fitted coefficient table path
     output: Optional[str] = "result.csv"        # None = in-memory only
     format: Optional[str] = None                # 'csv' | 'jsonl' | by extension
     verbose: bool = False
@@ -226,7 +228,7 @@ class SuiteSpec:
             # XLA device count is fixed at first jax init.  Omitted when
             # empty so legacy specs round-trip byte-identically.
             d["device_counts"] = list(self.device_counts)
-        for k in ("select", "wisdom", "output", "format"):
+        for k in ("select", "wisdom", "costmodel", "output", "format"):
             v = getattr(self, k)
             if v is not None:
                 d[k] = v
@@ -514,17 +516,28 @@ class Session:
         else:
             spec.load_modules()
         cache = self.plan_cache if spec.plan_cache else None
-        columns = columns_for(cache is not None)
+        wisdom = self._resolve_wisdom(spec)
+        columns = columns_for(cache is not None,
+                              plan_source=wisdom is not None)
         collector = _CollectorSink(columns)
         sinks: list[ResultSink] = [collector]
         if spec.output:
             sinks.append(open_sink(spec.output, fmt=spec.format,
                                    columns=columns))
         writer = _TeeSink(sinks)
-        wisdom = self._resolve_wisdom(spec)
-        run_nodes(nodes, context=self.context, config=spec.benchmark_config(),
-                  writer=writer, plan_cache=cache,
-                  wisdom=wisdom, verbose=spec.verbose)
+        # a fitted coefficient table, when the spec names one, becomes the
+        # active cost model for the whole run: ESTIMATE picks, MEASURE
+        # candidate orderings, and fallback chains all re-rank under it
+        if spec.costmodel:
+            from .costmodel import model_for_device, use_model
+            model_cm = use_model(model_for_device(self.device_kind,
+                                                  spec.costmodel))
+        else:
+            model_cm = nullcontext()
+        with model_cm:
+            run_nodes(nodes, context=self.context,
+                      config=spec.benchmark_config(), writer=writer,
+                      plan_cache=cache, wisdom=wisdom, verbose=spec.verbose)
         writer.save()
         if wisdom is not None and spec.rigor in (PlanRigor.MEASURE.value,
                                                  PlanRigor.PATIENT.value):

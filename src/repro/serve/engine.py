@@ -99,6 +99,8 @@ class ServeConfig:
     inflight: int = 2                # double-buffer depth per worker
     rigor: str = "estimate"          # planner rigor for request-time plans
     backend: Optional[str] = None    # pin one backend (bench per-library)
+    costmodel: Optional[str] = None  # fitted coefficient-table path: plans
+    #                                  and fallback chains rank under it
     timeout_ms: Optional[float] = None   # default per-request deadline
     bucket_batches: bool = True      # pow2-pad coalesced rows
     record_requests: bool = True     # keep per-request rows for ResultSet
@@ -202,6 +204,7 @@ class FFTService:
         self._staging_lock = threading.Lock()
         self._chains: dict[str, list[Candidate]] = {}
         self._chains_lock = threading.Lock()
+        self._cost_model = None   # resolved lazily: device discovery needs jax
         self._rows: list[Row] = []
         self._rows_lock = threading.Lock()
         self._started = False
@@ -666,6 +669,21 @@ class FFTService:
             self._worker_errors.append(e)
 
     # --- plan + staging ----------------------------------------------------
+    def _cost_model_cm(self):
+        """Scoped install of the config's fitted coefficient table (no-op
+        without one): request-time plans and fallback-chain rankings both
+        run under the per-device fit instead of the hand-written defaults."""
+        from contextlib import nullcontext
+
+        if not self.config.costmodel:
+            return nullcontext()
+        from ..core.costmodel import model_for_device, use_model
+
+        if self._cost_model is None:
+            self._cost_model = model_for_device(self.session.device_kind,
+                                                self.config.costmodel)
+        return use_model(self._cost_model)
+
     def _plan_candidate(self, problem: Problem) -> Candidate:
         if self.config.backend is not None:
             return Candidate(self.config.backend)
@@ -673,8 +691,9 @@ class FFTService:
         cache = self.session.plan_cache
         key = PlanCache.plan_key(self.session.device_kind, problem, rigor,
                                  scope="serve")
-        plan, _ = cache.plan(
-            key, lambda: make_plan(problem, rigor, wisdom=self.wisdom))
+        with self._cost_model_cm():
+            plan, _ = cache.plan(
+                key, lambda: make_plan(problem, rigor, wisdom=self.wisdom))
         if plan is None:
             raise ServeError(f"NULL plan for {problem.signature()} "
                              f"(wisdom miss under wisdom_only rigor)")
@@ -693,7 +712,8 @@ class FFTService:
         with self._chains_lock:
             rest = self._chains.get(ckey)
         if rest is None:
-            rest = fallback_chain(problem)
+            with self._cost_model_cm():
+                rest = fallback_chain(problem)
             with self._chains_lock:
                 self._chains[ckey] = rest
         return [top] + [c for c in rest if c.key() != top.key()]

@@ -100,21 +100,35 @@ def _record_times(rec: dict, times: list[float]) -> float:
     return best
 
 
+#: Rows whose roofline had to fall back to the algorithmic-minimum bytes
+#: because the cost model judged the (problem, candidate) infeasible —
+#: reported after the grid so a model/feasibility drift is visible in the
+#: run log instead of silently flattering roofline_frac.
+ROOFLINE_FALLBACKS: list[tuple[str, str]] = []
+
+
 def _annotate_roofline(rec: dict, problem, cand, best_s: float) -> None:
     """Attach the bytes-based FFT roofline: modeled 5·N·log2(N) flops,
-    modeled HBM bytes from the planner's ``estimate_bytes_moved``, and the
-    achieved fraction of whichever wall binds (always finite for an ok
-    row — an inf bytes model degrades to the algorithmic-minimum bytes)."""
+    modeled HBM bytes from the *active* cost model (so a fitted per-device
+    table flows into roofline_frac too), and the achieved fraction of
+    whichever wall binds (always finite for an ok row — an
+    :class:`~repro.core.costmodel.Infeasible` verdict degrades to the
+    one-read+one-write algorithmic minimum, and the row is tagged and
+    logged: a row that actually ran but models as infeasible means the
+    model's feasibility rules have drifted from the kernels')."""
     import jax
-    from repro.core.plan import estimate_bytes_moved
+    from repro.core.costmodel import get_active_model
     from repro.roofline.analysis import fft_model_flops, fft_roofline_frac
 
     flops = fft_model_flops(problem.extents, problem.batch)
-    bytes_ = estimate_bytes_moved(problem, cand)
+    verdict = get_active_model().estimate(problem, cand)
+    bytes_ = float(verdict)
     if not (0.0 < bytes_ < float("inf")):
-        # model sentinel (shouldn't happen for a row that actually ran):
-        # fall back to the one-read+one-write algorithmic minimum
         bytes_ = 2.0 * problem.signal_bytes
+        reason = getattr(verdict, "reason", "") or "non-finite model bytes"
+        rec["roofline_fallback"] = reason
+        ROOFLINE_FALLBACKS.append(
+            (f"{cand.key()} @ {problem.signature()}", reason))
     rec["model_flops"] = flops
     rec["model_bytes"] = bytes_
     rec["roofline_frac"] = fft_roofline_frac(
@@ -653,6 +667,11 @@ def main(argv=None) -> int:
             status = (f"{rec['time_ms']:9.3f} ms  {rec['gib_per_s']:7.2f} GiB/s"
                       if rec["ok"] else f"infeasible: {rec['error']}")
             print(f"{rec['extent']:>12s} {backend:16s} {status}")
+    if ROOFLINE_FALLBACKS:
+        print(f"{len(ROOFLINE_FALLBACKS)} row(s) used the 2x-signal-bytes "
+              "roofline fallback (model called them infeasible):")
+        for what, why in ROOFLINE_FALLBACKS:
+            print(f"  {what}: {why}")
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=1)
         f.write("\n")

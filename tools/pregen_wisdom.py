@@ -1,0 +1,116 @@
+#!/usr/bin/env python
+"""Pre-generate FFT planning wisdom over the support matrix.
+
+The offline analogue of fftw's ``wisdom`` utility, and the canonical
+replacement for the deprecated ``python -m repro.core.wisdom`` shim: sweep
+a grid of problems spanning the paper's three extent classes (powerof2 /
+radix357 / oddshape), ranks 1-3, and both transform kinds, run the
+planner's real measurement sweep for each (``near=False`` — a
+pregeneration run must never inherit a neighbor's pick), and save one
+schema-v3 wisdom pack whose records carry ``measured_ms`` + ``rigor``
+provenance.  The pack then serves two consumers:
+
+* a warm :class:`repro.core.suite.Session` (or the serve engine) loads it
+  and every matrix problem plans as an exact ``wisdom`` hit — no sweep,
+  the CI fit-smoke step asserts this — while unseen same-class shapes get
+  nearest-neighbor ``wisdom_near`` plans;
+* ``tools/fit_costmodel.py`` consumes the ``measured_ms`` rows as
+  training data alongside the BENCH trajectory documents.
+
+    PYTHONPATH=src python tools/pregen_wisdom.py \\
+        --out benchmarks/baselines/wisdom_cpu.json
+
+The default matrix is sized for the CI CPU device kind (interpret-mode
+Pallas kernels make big extents minutes-per-sweep); ``--extents`` widens
+it with bench_compare's ``4096 64x64 16x16x16`` syntax on real hardware.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.client import Problem  # noqa: E402
+from repro.core.extents import classify, parse_extents  # noqa: E402
+
+#: The default support matrix: every paper extent class at CI-feasible
+#: sizes, ranks 1-3.  powerof2 rows exercise the staged/fused kernel
+#: crossover, radix357 the mixed-radix path, oddshape the chirp-Z /
+#: Bluestein fallbacks.
+DEFAULT_EXTENTS = (
+    # rank 1
+    "64", "256", "1024", "4096",          # powerof2
+    "48", "384", "1080",                  # radix357
+    "121", "1001",                        # oddshape (11^2, 7*11*13)
+    # rank 2
+    "32x32", "64x64",                     # powerof2
+    "48x48",                              # radix357
+    # rank 3
+    "16x16x16",                           # powerof2
+)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="pre-generate schema-v3 FFT planning wisdom")
+    ap.add_argument("--out", default=None,
+                    help="pack path (default: benchmarks/baselines/"
+                         "wisdom_<device_kind>.json)")
+    ap.add_argument("--extents", nargs="*", default=list(DEFAULT_EXTENTS),
+                    help="extent grid, bench_compare syntax "
+                         "(4096 64x64 16x16x16)")
+    ap.add_argument("--kinds", nargs="*",
+                    default=["Outplace_Complex", "Outplace_Real"])
+    ap.add_argument("--precisions", nargs="*", default=["float"])
+    ap.add_argument("--batch", type=int, nargs="*", default=[1])
+    ap.add_argument("--rigor", choices=["measure", "patient"],
+                    default="measure",
+                    help="sweep rigor recorded into the pack (measure: "
+                         "feasible candidates; patient: + mixed per-axis "
+                         "assignments)")
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro.core.clients.jax_fft import build_forward
+    from repro.core.plan import PlanRigor, make_plan
+    from repro.core.wisdom import Wisdom
+
+    rigor = PlanRigor(args.rigor)
+    device_kind = jax.devices()[0].device_kind
+    out = args.out or os.path.join("benchmarks", "baselines",
+                                   f"wisdom_{device_kind}.json")
+    wisdom = Wisdom(out, device_kind=device_kind)
+
+    problems = [Problem(parse_extents(ext), kind, prec, batch=b)
+                for ext in args.extents
+                for kind in args.kinds
+                for prec in args.precisions
+                for b in args.batch]
+    print(f"sweeping {len(problems)} problems at rigor={rigor.value} "
+          f"on {device_kind!r} -> {out}")
+    t_start = time.perf_counter()
+    for i, problem in enumerate(problems):
+        t0 = time.perf_counter()
+        plan = make_plan(problem, rigor,
+                         build=lambda c, p=problem: build_forward(p, c),
+                         wisdom=wisdom, near=False)
+        dt = time.perf_counter() - t0
+        pick = plan.candidate.key() if plan and plan.candidate else "NULL"
+        best = (min(plan.measured_ms.values())
+                if plan and plan.measured_ms else float("nan"))
+        print(f"  [{i + 1:3d}/{len(problems)}] "
+              f"{problem.signature():<34} {classify(problem.extents):<9} "
+              f"-> {pick:<28} best={best:8.3f} ms  (swept {dt:6.1f} s)")
+    wisdom.save()
+    print(f"wrote {len(wisdom)} wisdom entries to {out} "
+          f"in {time.perf_counter() - t_start:.0f} s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
